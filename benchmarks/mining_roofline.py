@@ -1,0 +1,54 @@
+"""Mining-kernel roofline: arithmetic intensity + projected TPU throughput.
+
+The pairgen kernel writes 17 bytes/pair (two int32 planes + int32 duration
++ bool mask) and performs ~6 integer VPU ops/pair — arithmetic intensity
+~0.35 ops/byte, i.e. the mining pass is PURELY HBM-bandwidth-bound on TPU.
+Projection: 819 GB/s / 17 B/pair ≈ 48 G pairs/s/chip — the measured CPU
+number here is the correctness-validated baseline, the projection is what
+the dry-run-tiled kernel targets.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import mining
+from repro.data import synthea
+from repro.data.dbmart import from_rows
+
+BYTES_PER_PAIR = 17  # 4 (start) + 4 (end) + 4 (dur) + 1 (mask) + 4 amortized
+OPS_PER_PAIR = 6     # shift/or pack, sub, 3 compares for the mask
+HBM_BW = 819e9
+PEAK_VPU = 197e12 / 2  # int ops conservatively at half bf16 MXU peak
+
+
+def main():
+    pid, date, xid, _ = synthea.generate_benchmark_rows(512, 96, seed=3)
+    db = from_rows(pid.tolist(), date.tolist(),
+                   [f"c{v}" for v in xid.tolist()])
+    n_pairs = int(mining.count_sequences(db.nevents))
+
+    # measured (CPU, jnp reference path)
+    mined = mining.mine(db.phenx, db.date, db.nevents, backend="jnp")
+    mined.seq.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        mined = mining.mine(db.phenx, db.date, db.nevents, backend="jnp")
+        mined.seq.block_until_ready()
+    dt = (time.perf_counter() - t0) / 3
+
+    intensity = OPS_PER_PAIR / BYTES_PER_PAIR
+    tpu_bound = min(HBM_BW / BYTES_PER_PAIR, PEAK_VPU / OPS_PER_PAIR)
+    print("name,us_per_call,derived")
+    print(f"mining_roofline/cpu_measured,{dt*1e6:.0f},"
+          f"pairs_per_s={n_pairs/dt:.2e}")
+    print(f"mining_roofline/arithmetic_intensity,,ops_per_byte="
+          f"{intensity:.3f}")
+    print(f"mining_roofline/tpu_projection,,pairs_per_s={tpu_bound:.2e};"
+          f"bound=memory")
+    return {"pairs_per_s_cpu": n_pairs / dt, "tpu_bound": tpu_bound}
+
+
+if __name__ == "__main__":
+    main()

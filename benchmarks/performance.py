@@ -1,0 +1,76 @@
+"""Paper Table 2 — performance benchmark: tSPM+ scaling (Synthea-style).
+
+Scaling sweep over cohort size, in-memory vs file-based, with/without
+screening; reports sequences/second (the paper's 35k-patient cohort mines
+~7.2e9 sequences; CPU-scale here, --full approaches paper scale).
+Also the end-user-device observation: this container is a 1-core machine,
+matching the paper's "runs on laptops" claim directly.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import chunking, mining, sparsity
+from repro.data import synthea
+from repro.data.dbmart import from_rows
+
+
+def cohort(n, avg, seed=1):
+    pid, date, xid, _ = synthea.generate_benchmark_rows(n, avg, seed)
+    return from_rows(pid.tolist(), date.tolist(),
+                     [f"c{v}" for v in xid.tolist()])
+
+
+def one_scale(n_patients, avg_events, threshold=4, budget=64 << 20,
+              spill_dir="/tmp/tspm_perf"):
+    db = cohort(n_patients, avg_events)
+    n_seq = int(mining.count_sequences(db.nevents))
+    out = {"patients": n_patients, "avg_events": avg_events,
+           "sequences": n_seq}
+
+    t0 = time.perf_counter()
+    res = chunking.mine_chunked(db, budget_bytes=budget)
+    out["mem_noscreen_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res = chunking.mine_chunked(db, budget_bytes=budget, threshold=threshold)
+    out["mem_screen_s"] = time.perf_counter() - t0
+    out["kept"] = int(res["keep"].sum())
+
+    t0 = time.perf_counter()
+    chunking.mine_to_files(db, spill_dir, budget_bytes=budget)
+    out["file_noscreen_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    total = sum(len(p["seq"]) for p in
+                chunking.screen_files(spill_dir, threshold))
+    out["file_screen_s"] = out["file_noscreen_s"] + time.perf_counter() - t0
+    assert total == out["kept"]
+    out["seq_per_s"] = n_seq / out["mem_noscreen_s"]
+    return out
+
+
+def main(full=False):
+    scales = [(500, 60), (1000, 60), (2000, 60)]
+    if full:
+        scales += [(5000, 120), (35_000, 60)]
+    print(f"# paper Table 2 analogue — {os.cpu_count()}-core host "
+          "(end-user-device scale)")
+    print("name,us_per_call,derived")
+    rows = []
+    for n, avg in scales:
+        r = one_scale(n, avg)
+        rows.append(r)
+        for k in ("mem_noscreen_s", "mem_screen_s", "file_noscreen_s",
+                  "file_screen_s"):
+            print(f"performance/{k}_p{n},{r[k]*1e6:.0f},"
+                  f"seqs={r['sequences']};kept={r.get('kept','-')}")
+        print(f"performance/throughput_p{n},,seq_per_s={r['seq_per_s']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

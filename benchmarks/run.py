@@ -1,0 +1,103 @@
+"""Benchmark harness — one section per paper table/figure.
+
+  comparison      -> paper Table 1 (original tSPM vs tSPM+, x-factor)
+  performance     -> paper Table 2 (scaling, in-memory vs file-based)
+  mining_roofline -> kernel arithmetic intensity + TPU projection
+  postcovid       -> vignette-2 quality (the paper's use-case claim)
+  roofline        -> LM-cell roofline table (reads experiments/dryrun/*.json
+                     if the dry-run sweep has been run)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+import time
+
+
+def _section(title):
+    print(f"\n## {title}", flush=True)
+
+
+def postcovid_bench():
+    import numpy as np
+
+    from repro.core import mining, postcovid
+    from repro.data import dbmart, synthea
+
+    pats, dates, phx, truth = synthea.generate_cohort(
+        n_patients=300, avg_events=40, seed=17)
+    db = dbmart.from_rows(pats, dates, phx)
+    t0 = time.perf_counter()
+    mined = mining.mine(db.phenx, db.date, db.nevents, backend="jnp")
+    seq, dur, pat, msk = mining.flatten(mined)
+    cfg = postcovid.PostCovidConfig(
+        covid_id=db.vocab.phenx_index[synthea.COVID])
+    pcc, _ = postcovid.identify(seq, dur, pat, msk, db.phenx, db.nevents,
+                                cfg, db.n_patients, db.vocab.n_phenx)
+    dt = time.perf_counter() - t0
+    pcc = np.asarray(pcc)
+    pred = postcovid.decode_symptoms(pcc, db.vocab)
+    tp = fp = fn = 0
+    for p in range(db.n_patients):
+        t, pr = truth.symptom_sets[p], pred[p]
+        tp += len(t & pr)
+        fp += len(pr - t)
+        fn += len(t - pr)
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    f1 = 2 * prec * rec / max(prec + rec, 1e-9)
+    acc = (pcc.any(1) == truth.long_covid).mean()
+    print("name,us_per_call,derived")
+    print(f"postcovid/pipeline,{dt*1e6:.0f},f1={f1:.3f};patient_acc={acc:.3f}")
+
+
+def roofline_bench():
+    print("name,us_per_call,derived")
+    files = sorted(glob.glob("experiments/dryrun/*pod16x16.json"))
+    if not files:
+        print("roofline/missing,,run `python -m repro.launch.dryrun --all`")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            tag = rec.get("status", "?")
+            print(f"roofline/{rec['arch']}__{rec['shape']},,{tag}")
+            continue
+        r = rec["roofline"]
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        print(f"roofline/{rec['arch']}__{rec['shape']},{bound*1e6:.0f},"
+              f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    small = "--full" not in sys.argv
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    _section("comparison (paper Table 1)")
+    from benchmarks import comparison
+
+    comparison.main(small=small)
+
+    _section("performance (paper Table 2)")
+    from benchmarks import performance
+
+    performance.main(full=not small)
+
+    _section("mining roofline")
+    from benchmarks import mining_roofline
+
+    mining_roofline.main()
+
+    _section("postcovid (vignette 2)")
+    postcovid_bench()
+
+    _section("LM-cell roofline (from dry-run)")
+    roofline_bench()
+
+
+if __name__ == "__main__":
+    main()

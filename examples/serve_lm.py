@@ -1,0 +1,13 @@
+"""Batched serving demo: prefill + decode with the wave scheduler.
+
+    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-2.7b --reduced
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "tspm-mlho", "--reduced",
+                            "--requests", "8", "--batch", "4"]
+    serve.main(argv)

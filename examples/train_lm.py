@@ -1,0 +1,24 @@
+"""End-to-end driver: train an LM on tSPM+-mined clinical event streams.
+
+    PYTHONPATH=src python examples/train_lm.py                  # quick CPU run
+    PYTHONPATH=src python examples/train_lm.py --full           # ~100M params
+
+Wraps launch/train.py: synthetic cohort -> mining pipeline -> token corpus
+-> train with checkpointing + preemption handling.  Any assigned arch:
+    python examples/train_lm.py --arch gemma2-2b --reduced
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--full" in argv:
+        argv.remove("--full")
+        argv = ["--arch", "tspm-mlho", "--steps", "300", "--batch", "8",
+                "--seq", "256", "--patients", "512"] + argv
+    elif not argv:
+        argv = ["--arch", "tspm-mlho", "--reduced", "--steps", "120",
+                "--batch", "8", "--seq", "128", "--ckpt-dir",
+                "/tmp/tspm_lm_ckpt"]
+    train.main(argv)

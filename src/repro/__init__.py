@@ -1,0 +1,11 @@
+"""repro — tSPM+ (transitive sequential pattern mining) as a JAX/TPU framework.
+
+The paper's sequence ids are 64-bit packed integers, so the whole package
+runs with x64 enabled.  All model / kernel code specifies dtypes explicitly
+(bf16 / f32 / i32) and is unaffected by the default-width change.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,100 @@
+"""Generate EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun JSONs.
+
+  PYTHONPATH=src python -m repro.analysis.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(out_dir: str, mesh: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    return f"{n/2**30:.2f}GiB"
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | status | per-device temp | args | compile |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "ok":
+            mem = r["memory_analysis"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ok | "
+                f"{fmt_bytes(mem.get('temp_size_in_bytes'))} | "
+                f"{fmt_bytes(mem.get('argument_size_in_bytes'))} | "
+                f"{r['t_compile_s']:.0f}s |")
+        else:
+            reason = r.get("reason", r.get("error", ""))[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                         f"{reason} | | |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "useful | frac | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — | |")
+            continue
+        rf = r["roofline"]
+        note = _note(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['t_compute_s']:.3g}s | "
+            f"{rf['t_memory_s']:.3g}s | {rf['t_collective_s']:.3g}s | "
+            f"{rf['dominant']} | {rf['useful_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.3f} | {note} |")
+    return "\n".join(lines)
+
+
+def _note(r) -> str:
+    rf = r["roofline"]
+    bd = rf["coll_breakdown"]
+    if rf["dominant"] == "collective" and bd:
+        top = max(bd, key=bd.get)
+        return f"{top} {bd[top]/2**30:.0f}GiB/dev dominates"
+    if rf["dominant"] == "compute":
+        return "compute-bound (good)"
+    return "HBM-bound"
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    for mesh, title in (("pod16x16", "single pod (16x16 = 256 chips)"),
+                        ("pod2x16x16", "multi-pod (2x16x16 = 512 chips)")):
+        recs = load(out_dir, mesh)
+        if not recs:
+            continue
+        print(f"\n### Dry-run — {title}\n")
+        print(dryrun_table(recs))
+        if mesh == "pod16x16":
+            print(f"\n### Roofline — {title}\n")
+            print(roofline_table(recs))
+    ok = sum(1 for m in ("pod16x16", "pod2x16x16") for r in load(out_dir, m)
+             if r["status"] == "ok")
+    skip = sum(1 for m in ("pod16x16", "pod2x16x16") for r in load(out_dir, m)
+               if r["status"] == "skipped-by-rule")
+    fail = sum(1 for m in ("pod16x16", "pod2x16x16") for r in load(out_dir, m)
+               if r["status"] == "FAILED")
+    print(f"\ncells: ok={ok} skipped-by-rule={skip} failed={fail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Adaptive dbmart partitioning + file-based mining (paper's two modes).
+
+The R package "split[s] the dbmart in chunks with an adaptive size to fit
+the available memory limitations", and the C++ library has a *file-based*
+mode that spills per-patient sequence files.  Here the same two ideas govern
+HBM instead of RAM:
+
+  * ``plan_chunks`` — greedy patient ranges such that the mining working set
+    ``P_chunk * E_chunk^2 * BYTES_PER_PAIR`` fits the byte budget;
+    per-chunk ``E`` adapts to the longest patient in the chunk (padded to a
+    tile multiple), so short-history chunks pack many more patients.
+  * ``mine_chunked`` — in-memory mode: mine chunk-by-chunk, merge on host.
+  * ``mine_to_files`` / ``screen_files`` — file-based mode: spill each
+    chunk's packed sequences to ``.npz`` and stream them back for a global
+    hash-count screen (counts merge across chunks exactly like the psum in
+    the distributed screen).
+
+Chunked == unchunked is property-tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterable
+
+import numpy as np
+
+from repro.core import mining, sparsity
+from repro.data.dbmart import DBMart
+
+# dense pair tile: 8B seq + 4B dur + 1B mask, x2 for sort scratch
+BYTES_PER_PAIR = 26
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    start: int
+    stop: int
+    max_events: int
+
+    @property
+    def n_patients(self) -> int:
+        return self.stop - self.start
+
+
+def plan_chunks(nevents: np.ndarray, budget_bytes: int,
+                pad_multiple: int = 8, layout: str = "triangular") -> list[Chunk]:
+    """Greedy adaptive partitioning under a working-set byte budget."""
+    chunks: list[Chunk] = []
+    P = len(nevents)
+    factor = 0.5 if layout == "triangular" else 1.0
+    i = 0
+    while i < P:
+        e = max(int(nevents[i]), 1)
+        e = -(-e // pad_multiple) * pad_multiple
+        j = i + 1
+        while j < P:
+            e2 = max(e, -(-max(int(nevents[j]), 1) // pad_multiple) * pad_multiple)
+            cost = (j + 1 - i) * e2 * e2 * BYTES_PER_PAIR * factor
+            if cost > budget_bytes and j > i:
+                break
+            e = e2
+            j += 1
+        if (j - i) * e * e * BYTES_PER_PAIR * factor > budget_bytes and j - i > 1:
+            j -= 1
+            e = max(1, -(-int(max(nevents[i:j], default=1)) // pad_multiple) * pad_multiple)
+        chunks.append(Chunk(i, j, e))
+        i = j
+    return chunks
+
+
+def mine_chunked(db: DBMart, budget_bytes: int = 1 << 28, threshold: int | None = None,
+                 codec: str = "bit", backend: str = "jnp",
+                 n_buckets_log2: int = 22) -> dict:
+    """In-memory chunked mining (+ optional global hash screen).
+
+    Returns flat numpy arrays {seq, dur, patient, mask} over all chunks
+    (concatenated; masks mark real pairs), plus 'keep' when screening.
+    """
+    chunks = plan_chunks(np.asarray(db.nevents), budget_bytes)
+    parts = []
+    counts = None
+    for ch in chunks:
+        sub = db.slice_patients(ch.start, ch.stop, ch.max_events)
+        mined = mining.mine(sub.phenx, sub.date, sub.nevents, codec=codec,
+                            backend=backend)
+        if threshold is not None:
+            c = sparsity.local_bucket_counts(mined.seq, mined.mask, n_buckets_log2)
+            counts = c if counts is None else sparsity.merge_bucket_counts(counts, c)
+        seq, dur, pat, msk = mining.flatten(mined, patient_offset=ch.start)
+        parts.append((np.asarray(seq), np.asarray(dur), np.asarray(pat),
+                      np.asarray(msk)))
+    out = {
+        "seq": np.concatenate([p[0] for p in parts]),
+        "dur": np.concatenate([p[1] for p in parts]),
+        "patient": np.concatenate([p[2] for p in parts]),
+        "mask": np.concatenate([p[3] for p in parts]),
+    }
+    if threshold is not None:
+        keep = sparsity.screen_hash_from_counts(
+            out["seq"], out["mask"], np.asarray(counts), threshold, n_buckets_log2)
+        out["keep"] = np.asarray(keep)
+    return out
+
+
+def mine_to_files(db: DBMart, out_dir: str, budget_bytes: int = 1 << 28,
+                  codec: str = "bit", backend: str = "jnp",
+                  n_buckets_log2: int = 22) -> list[str]:
+    """File-based mode: one .npz per chunk + a merged bucket-count table."""
+    os.makedirs(out_dir, exist_ok=True)
+    for name in os.listdir(out_dir):   # stale spill from a previous cohort
+        if name.startswith("chunk_") or name == "bucket_counts.npy":
+            os.remove(os.path.join(out_dir, name))
+    chunks = plan_chunks(np.asarray(db.nevents), budget_bytes)
+    paths = []
+    counts = None
+    for k, ch in enumerate(chunks):
+        sub = db.slice_patients(ch.start, ch.stop, ch.max_events)
+        mined = mining.mine(sub.phenx, sub.date, sub.nevents, codec=codec,
+                            backend=backend)
+        c = sparsity.local_bucket_counts(mined.seq, mined.mask, n_buckets_log2)
+        counts = c if counts is None else sparsity.merge_bucket_counts(counts, c)
+        seq, dur, pat, msk = mining.flatten(mined, patient_offset=ch.start)
+        path = os.path.join(out_dir, f"chunk_{k:05d}.npz")
+        # compact before spilling: only real pairs hit the disk
+        msk = np.asarray(msk)
+        np.savez(path, seq=np.asarray(seq)[msk], dur=np.asarray(dur)[msk],
+                 patient=np.asarray(pat)[msk])
+        paths.append(path)
+    np.save(os.path.join(out_dir, "bucket_counts.npy"), np.asarray(counts))
+    return paths
+
+
+def screen_files(out_dir: str, threshold: int,
+                 n_buckets_log2: int = 22) -> Iterable[dict]:
+    """Stream chunks back, applying the merged global count table."""
+    counts = np.load(os.path.join(out_dir, "bucket_counts.npy"))
+    for name in sorted(os.listdir(out_dir)):
+        if not name.startswith("chunk_"):
+            continue
+        z = np.load(os.path.join(out_dir, name))
+        seq = z["seq"]
+        keep = np.asarray(sparsity.screen_hash_from_counts(
+            seq, np.ones(seq.shape, bool), counts, threshold, n_buckets_log2))
+        yield {"seq": seq[keep], "dur": z["dur"][keep],
+               "patient": z["patient"][keep]}

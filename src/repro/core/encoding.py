@@ -1,0 +1,149 @@
+"""Numeric encoding of dbmarts and 64-bit sequence packing (paper §Methods).
+
+The paper dictionary-encodes phenX strings and patient ids to dense integers,
+then packs a (start_phenx, end_phenx) pair into a single 64-bit integer:
+
+  * ``paper`` codec — decimal shift: ``seq = start * 10**7 + end``
+    (the paper appends the zero-padded 7-digit end code; vocab < 10**7).
+  * ``bit`` codec (TPU-native default) — ``seq = (start << 24) | end``
+    (vocab < 2**24; shifts are single VPU ops, no integer multiply, and the
+    id space is larger).  See DESIGN.md §2.
+
+Durations (days) are carried separately as int32 (paper default), and can be
+*fused* into the low bits of the id with a bucketed bit-shift — the paper's
+"cheap bitshift operations to shift the duration on the last bits of the
+sequence" — which makes (sequence, duration-bucket) support counting a plain
+64-bit key operation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# --- codec constants -------------------------------------------------------
+BIT_SHIFT = 24                      # bits for the end-phenX slot
+BIT_MASK = (1 << BIT_SHIFT) - 1
+PAPER_SHIFT = 10**7                 # the paper's 7-digit decimal shift
+DUR_BITS = 15                       # fused-duration bucket bits (63-bit total)
+DUR_MASK = (1 << DUR_BITS) - 1
+MAX_BIT_VOCAB = 1 << BIT_SHIFT
+MAX_PAPER_VOCAB = PAPER_SHIFT
+SENTINEL = np.iinfo(np.int64).max   # the paper's UINT_MAX marking trick
+
+CODECS = ("bit", "paper")
+
+
+def _check_codec(codec: str) -> None:
+    if codec not in CODECS:
+        raise ValueError(f"unknown codec {codec!r}; expected one of {CODECS}")
+
+
+# --- packing (jittable, int64) --------------------------------------------
+def pack(start, end, codec: str = "bit"):
+    """Pack (start, end) phenX ids into a single int64 sequence id."""
+    _check_codec(codec)
+    start = jnp.asarray(start, jnp.int64)
+    end = jnp.asarray(end, jnp.int64)
+    if codec == "bit":
+        return (start << BIT_SHIFT) | end
+    return start * PAPER_SHIFT + end
+
+
+def unpack(seq, codec: str = "bit"):
+    """Invert :func:`pack`; returns (start, end) as int32."""
+    _check_codec(codec)
+    seq = jnp.asarray(seq, jnp.int64)
+    if codec == "bit":
+        return (seq >> BIT_SHIFT).astype(jnp.int32), (seq & BIT_MASK).astype(jnp.int32)
+    return (seq // PAPER_SHIFT).astype(jnp.int32), (seq % PAPER_SHIFT).astype(jnp.int32)
+
+
+def fuse_duration(seq, dur_bucket):
+    """Shift a bucketed duration into the low bits of the id (paper trick)."""
+    seq = jnp.asarray(seq, jnp.int64)
+    b = jnp.clip(jnp.asarray(dur_bucket, jnp.int64), 0, DUR_MASK)
+    return (seq << DUR_BITS) | b
+
+
+def split_duration(fused):
+    fused = jnp.asarray(fused, jnp.int64)
+    return fused >> DUR_BITS, (fused & DUR_MASK).astype(jnp.int32)
+
+
+def bucket_duration(dur_days, bucket_days: int = 30):
+    """Duration (days) -> coarse bucket id (default: ~months)."""
+    d = jnp.asarray(dur_days, jnp.int32)
+    return jnp.clip(d // jnp.int32(bucket_days), 0, DUR_MASK).astype(jnp.int32)
+
+
+def max_vocab(codec: str = "bit") -> int:
+    _check_codec(codec)
+    return MAX_BIT_VOCAB if codec == "bit" else MAX_PAPER_VOCAB
+
+
+# --- host-side lookup tables (paper: "requires lookup tables") -------------
+@dataclasses.dataclass
+class Vocab:
+    """Bidirectional phenX / patient lookup tables (host-side, numpy)."""
+
+    phenx_strings: list[str]
+    patient_keys: list
+    phenx_index: dict[str, int] = dataclasses.field(default_factory=dict)
+    patient_index: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.phenx_index:
+            self.phenx_index = {s: i for i, s in enumerate(self.phenx_strings)}
+        if not self.patient_index:
+            self.patient_index = {k: i for i, k in enumerate(self.patient_keys)}
+
+    @property
+    def n_phenx(self) -> int:
+        return len(self.phenx_strings)
+
+    @property
+    def n_patients(self) -> int:
+        return len(self.patient_keys)
+
+    def decode_phenx(self, pid: int) -> str:
+        return self.phenx_strings[int(pid)]
+
+    def decode_sequence(self, seq_id: int, codec: str = "bit") -> str:
+        """Human-readable 'start -> end' (paper: reversible representation)."""
+        s, e = unpack(np.int64(seq_id), codec)
+        return f"{self.phenx_strings[int(s)]} -> {self.phenx_strings[int(e)]}"
+
+
+def build_vocab(patients: Sequence, phenx: Sequence[str]) -> Vocab:
+    """Assign running numbers starting at 0 to unique phenX / patients.
+
+    Matches the paper: ids are assigned in first-appearance order so the
+    patient id doubles as an array index.
+    """
+    phenx_strings: list[str] = []
+    phenx_index: dict[str, int] = {}
+    patient_keys: list = []
+    patient_index: dict = {}
+    for p in patients:
+        if p not in patient_index:
+            patient_index[p] = len(patient_keys)
+            patient_keys.append(p)
+    for x in phenx:
+        if x not in phenx_index:
+            phenx_index[x] = len(phenx_strings)
+            phenx_strings.append(x)
+    return Vocab(phenx_strings, patient_keys, phenx_index, patient_index)
+
+
+def encode_rows(
+    patients: Sequence, dates: Sequence[int], phenx: Sequence[str], vocab: Vocab | None = None
+):
+    """Alphanumeric rows -> numeric (patient_id, date, phenx_id) arrays."""
+    if vocab is None:
+        vocab = build_vocab(patients, phenx)
+    pid = np.fromiter((vocab.patient_index[p] for p in patients), np.int32, len(patients))
+    xid = np.fromiter((vocab.phenx_index[x] for x in phenx), np.int32, len(phenx))
+    return pid, np.asarray(dates, np.int32), xid, vocab

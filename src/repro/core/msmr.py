@@ -1,0 +1,105 @@
+"""MSMR-lite: Minimize-Sparsity-Maximize-Relevance feature selection.
+
+The MLHO vignette pipes screened sequences through MSMR (Estiri et al.):
+sparsity screening, then (joint) mutual information against the label to
+keep the top-K most relevant sequences.  This module builds the
+patient x sequence feature matrix from mined ids and ranks features by
+mutual information, with an optional greedy JMI pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import SENTINEL
+
+
+class FeatureMatrix(NamedTuple):
+    x: jax.Array          # [P, K] float32 binary presence
+    feature_ids: jax.Array  # [K] int64 sequence ids (sentinel padded)
+    n_features: jax.Array   # scalar
+
+
+def top_sequences(u_ids, u_support, k: int):
+    """Top-k unique sequence ids by support (host or device)."""
+    u_ids = jnp.asarray(u_ids, jnp.int64)
+    order = jnp.argsort(-jnp.where(u_ids != SENTINEL, u_support, -1))
+    ids = u_ids[order][:k]
+    return jnp.sort(ids)  # sorted for binary-search membership
+
+
+@functools.partial(jax.jit, static_argnames=("n_patients",))
+def feature_matrix(seq, patient, mask, feature_ids, n_patients: int) -> FeatureMatrix:
+    """Binary presence matrix via binary search into sorted feature ids."""
+    seq = jnp.asarray(seq, jnp.int64).reshape(-1)
+    patient = jnp.asarray(patient, jnp.int32).reshape(-1)
+    mask = jnp.asarray(mask, bool).reshape(-1)
+    k = feature_ids.shape[0]
+    idx = jnp.clip(jnp.searchsorted(feature_ids, seq), 0, k - 1)
+    hit = (feature_ids[idx] == seq) & mask & (seq != SENTINEL)
+    x = jnp.zeros((n_patients, k), jnp.float32)
+    x = x.at[patient, idx].max(hit.astype(jnp.float32))
+    return FeatureMatrix(x, feature_ids, jnp.sum(feature_ids != SENTINEL))
+
+
+def _mi_binary(x, y):
+    """MI(feature; label) for binary feature columns x [P, K], labels y [P]."""
+    y = y.astype(jnp.float32)[:, None]
+    p = x.shape[0]
+    eps = 1e-9
+    p1 = x.mean(0)
+    py = y.mean()
+    p11 = (x * y).sum(0) / p
+    mi = jnp.zeros(x.shape[1], jnp.float32)
+    for xv in (0, 1):
+        for yv in (0, 1):
+            pxy = p11 if (xv, yv) == (1, 1) else None
+            if (xv, yv) == (1, 0):
+                pxy = p1 - p11
+            elif (xv, yv) == (0, 1):
+                pxy = py - p11
+            elif (xv, yv) == (0, 0):
+                pxy = 1 - p1 - py + p11
+            px = p1 if xv else 1 - p1
+            pyv = py if yv else 1 - py
+            mi += pxy * (jnp.log(pxy + eps) - jnp.log(px + eps) - jnp.log(pyv + eps))
+    return mi
+
+
+@jax.jit
+def mi_scores(x, y):
+    return _mi_binary(jnp.asarray(x, jnp.float32), jnp.asarray(y))
+
+
+def select_jmi(x, y, k: int) -> np.ndarray:
+    """Greedy JMI: argmax_f sum_{s in S} I(f, s; y), seeded by max MI.
+
+    Joint MI of a feature pair is computed on the 4-valued joint variable
+    (2 bits).  Host-side loop (k is small, e.g. 200)."""
+    x = np.asarray(x) > 0.5
+    y = np.asarray(y) > 0.5
+    P, K = x.shape
+    k = min(k, K)
+    base = np.asarray(mi_scores(x, y))
+    selected = [int(np.argmax(base))]
+    scores = np.zeros(K)
+    for _ in range(k - 1):
+        s = x[:, selected[-1]]
+        joint = x.astype(np.int8) * 2 + s[:, None]  # [P, K] in {0..3}
+        for v in range(4):
+            xv = joint == v
+            pv = xv.mean(0)
+            p1 = (xv & y[:, None]).mean(0)
+            p0 = pv - p1
+            py = y.mean()
+            eps = 1e-12
+            scores += p1 * (np.log(p1 + eps) - np.log(pv + eps) - np.log(py + eps))
+            scores += p0 * (np.log(p0 + eps) - np.log(pv + eps) - np.log(1 - py + eps))
+        masked = scores.copy()
+        masked[selected] = -np.inf
+        selected.append(int(np.argmax(masked)))
+    return np.asarray(selected, np.int32)

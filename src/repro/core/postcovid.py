@@ -1,0 +1,164 @@
+"""Post-COVID-19 (WHO definition) identification from mined sequences.
+
+The paper's second vignette: a symptom is a Post-COVID-19 (PCC) symptom for
+a patient when it (a) occurs after a COVID-19 infection, (b) is ongoing for
+at least two months, and (c) cannot be explained by a competing cause.
+The vignette implements this purely on transitive sequences + durations:
+
+  1. candidate sequences = sequences starting with covid whose end phenX is
+     in the transitive end-set of covid (queries.transitive_ends_with);
+  2. per patient, drop candidates that occur only once or whose duration
+     spread (max - min over occurrences) is below ~2 months;
+  3. exclusion by correlation: for each remaining candidate end-phenX, look
+     at *other* sequences ending in it; if some start phenX c is tightly
+     aligned with the symptom run (same duration spread as the covid
+     sequence — the vectorized proxy for the vignette's pairwise
+     correlation on (sequence, duration-bucket) tuples), proximate
+     (min duration <= proximity_days) and itself a point event (rare),
+     the candidate is explained away and removed for that patient.
+
+Deviation note (DESIGN.md §9): the vignette computes Pearson correlations
+per (sequence, end-duration-bucket) tuple; with perfectly aligned runs the
+correlation is 1 exactly when the duration *spreads* coincide, so we use
+|spread_c - spread_covid| <= align_tol_days as the vectorizable criterion,
+plus the significance guard (occurrence-count and proximity), which keeps
+the rule exact on point-cause explanations and avoids per-triple host loops.
+
+Everything is dense [P, V, V] tables built by scatter from the flat mined
+arrays — V is the (small) phenX vocabulary of the cohort or the
+candidate-restricted subset.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding
+
+
+@dataclasses.dataclass
+class PostCovidConfig:
+    covid_id: int
+    min_occurrences: int = 2        # rule: "occur only once" -> drop
+    min_spread_days: int = 56       # WHO: ongoing for at least two months
+    proximity_days: int = 30        # competing cause close to run start
+    align_tol_days: int = 7         # spread-match tolerance (corr proxy)
+    anchor_rate_min: float = 0.5    # cohort: cause anchors the run when
+    anchor_support_min: int = 2     #   co-present (correlation+significance)
+    assoc_ratio_min: float = 3.0    # cohort: run-rate ratio covid/non-covid
+    assoc_support_min: int = 2      #   minimum run cases among covid patients
+
+
+@functools.partial(jax.jit, static_argnames=("n_patients", "n_phenx", "codec"))
+def pair_tables(seq, dur, patient, mask, n_patients: int, n_phenx: int,
+                codec: str = "bit"):
+    """Dense per-patient pair stats: count / dmin / dmax as [P, V, V]."""
+    seq = jnp.asarray(seq, jnp.int64).reshape(-1)
+    dur = jnp.asarray(dur, jnp.int32).reshape(-1)
+    patient = jnp.asarray(patient, jnp.int32).reshape(-1)
+    mask = jnp.asarray(mask, bool).reshape(-1)
+    s, e = encoding.unpack(seq, codec)
+    s = jnp.where(mask, s, 0)
+    e = jnp.where(mask, e, 0)
+    p = jnp.where(mask, patient, 0)
+    m = mask.astype(jnp.int32)
+    big = jnp.int32(2**31 - 1)
+    cnt = jnp.zeros((n_patients, n_phenx, n_phenx), jnp.int32).at[p, s, e].add(m)
+    dmin = jnp.full((n_patients, n_phenx, n_phenx), big, jnp.int32).at[p, s, e].min(
+        jnp.where(mask, dur, big))
+    dmax = jnp.full((n_patients, n_phenx, n_phenx), -1, jnp.int32).at[p, s, e].max(
+        jnp.where(mask, dur, -1))
+    # masked lanes scatter neutral elements (0 / +inf / -1) -> no pollution
+    return cnt, dmin, dmax
+
+
+@functools.partial(jax.jit, static_argnames=("n_patients", "n_phenx"))
+def occurrence_counts(phenx, nevents, n_patients: int, n_phenx: int):
+    """[P, V] event occurrence counts from the padded dbmart."""
+    phenx = jnp.asarray(phenx, jnp.int32)
+    P, E = phenx.shape
+    valid = jnp.arange(E, dtype=jnp.int32)[None, :] < jnp.asarray(nevents)[:, None]
+    rows = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[:, None], (P, E))
+    occ = jnp.zeros((n_patients, n_phenx), jnp.int32)
+    return occ.at[rows, jnp.where(valid, phenx, 0)].add(valid.astype(jnp.int32))
+
+
+def identify(seq, dur, patient, mask, phenx, nevents, cfg: PostCovidConfig,
+             n_patients: int, n_phenx: int, codec: str = "bit"):
+    """Returns (pcc [P, V] bool, candidates [P, V] bool)."""
+    cnt, dmin, dmax = pair_tables(seq, dur, patient, mask, n_patients,
+                                  n_phenx, codec)
+    occ = occurrence_counts(phenx, nevents, n_patients, n_phenx)
+    cv = cfg.covid_id
+    spread = jnp.where(cnt >= 1, dmax - dmin, -1)
+
+    covid_cnt = cnt[:, cv, :]                      # [P, V]
+    covid_spread = spread[:, cv, :]
+    # a persisting run: >= min_occurrences spanning >= ~2 months after covid
+    has_run = (covid_cnt >= cfg.min_occurrences) & \
+              (covid_spread >= cfg.min_spread_days)
+    # new onset: an s->covid sequence proves s occurred BEFORE the infection
+    # (WHO: PCC symptoms are new after infection) — mined for free.
+    new_onset = cnt[:, :, cv] == 0                 # [P, V]
+
+    # cohort-level relevance (the vignette's correlation "significance",
+    # MSMR-style): persisting *runs* of the code must be covid-associated,
+    # which screens out background care codes (labs, visits) that form late
+    # runs in covid and non-covid patients alike.  Run presence for any
+    # patient comes free from the s->s diagonal of the pair tables: the
+    # spread of a code against itself is its overall date spread.
+    has_covid = occ[:, cv] >= 1                    # [P]
+    present = occ >= 1                             # [P, V]
+    diag = jnp.arange(cnt.shape[1])
+    self_spread = spread[:, diag, diag]            # [P, V]
+    run_any = (occ >= cfg.min_occurrences) & \
+              (self_spread >= cfg.min_spread_days)
+    n_cov = jnp.maximum(jnp.sum(has_covid), 1)
+    n_non = jnp.maximum(jnp.sum(~has_covid), 1)
+    runs_cov = jnp.sum(run_any & has_covid[:, None], 0)
+    rate_cov = runs_cov / n_cov
+    rate_non = jnp.sum(run_any & ~has_covid[:, None], 0) / n_non
+    covid_assoc = (rate_cov >= cfg.assoc_ratio_min * jnp.maximum(rate_non, 1e-9)) \
+        & (runs_cov >= cfg.assoc_support_min)      # [V]
+
+    candidates = has_run & new_onset & covid_assoc[None, :]
+
+    # exclusion by competing cause: c anchors the run locally (proximate,
+    # same occurrence count and duration spread as the covid sequence — the
+    # vectorized stand-in for corr == 1 on aligned duration series) ...
+    aligned = (jnp.abs(spread - covid_spread[:, None, :]) <= cfg.align_tol_days) \
+        & (cnt == covid_cnt[:, None, :])
+    proximate = (dmin >= 0) & (dmin <= cfg.proximity_days) & \
+                (cnt >= cfg.min_occurrences)
+    anchors = aligned & proximate                  # [P, Vc, Vs]
+    V = cnt.shape[1]
+    not_self = ~jnp.eye(V, dtype=bool)[None]       # c != s
+    anchors &= not_self
+    anchors = anchors.at[:, cv, :].set(False)      # c != covid
+    # ... and does so consistently across the cohort wherever c co-occurs
+    # with an s-run (the "high correlation and significance" criterion):
+    co_present = present[:, :, None] & has_run[:, None, :]   # [P, Vc, Vs]
+    n_co = jnp.sum(co_present, 0)                  # [Vc, Vs]
+    n_anchor = jnp.sum(anchors & co_present, 0)
+    cause_rate = n_anchor / jnp.maximum(n_co, 1)
+    significant = (cause_rate >= cfg.anchor_rate_min) & \
+                  (n_co >= cfg.anchor_support_min)
+    excluded = jnp.any(anchors & significant[None], axis=1)  # [P, Vs]
+
+    pcc = candidates & ~excluded
+    pcc = pcc.at[:, cv].set(False)
+    return pcc, candidates
+
+
+def decode_symptoms(pcc: np.ndarray, vocab) -> list[set[str]]:
+    """[P, V] bool -> per-patient human-readable symptom sets (paper: back
+    to fully human readable via the lookup tables)."""
+    out = []
+    pcc = np.asarray(pcc)
+    for p in range(pcc.shape[0]):
+        out.append({vocab.phenx_strings[int(v)] for v in np.nonzero(pcc[p])[0]})
+    return out

@@ -1,0 +1,85 @@
+"""Sequence utility queries (the paper's C++ helper functions).
+
+The library "facilitates tasks such as extracting [sequences] with given
+start phenX, end phenX or specified minimum durations.  Another function
+combines these ... all sequences that end with a phenX which is an end phenX
+of all sequences with a given start phenX" — the transitive expansion used
+by the Post-COVID vignette.  All masks compose with the mining mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core.encoding import SENTINEL
+
+
+def starts_with(seq, phenx_id, codec: str = "bit"):
+    s, _ = encoding.unpack(seq, codec)
+    return s == jnp.int32(phenx_id)
+
+
+def ends_with(seq, phenx_id, codec: str = "bit"):
+    _, e = encoding.unpack(seq, codec)
+    return e == jnp.int32(phenx_id)
+
+
+def min_duration(dur, days: int):
+    return jnp.asarray(dur) >= jnp.int32(days)
+
+
+def _membership(values, table_sorted):
+    """value in sorted sentinel-padded table (vectorized binary search)."""
+    idx = jnp.searchsorted(table_sorted, values)
+    idx = jnp.clip(idx, 0, table_sorted.shape[0] - 1)
+    return table_sorted[idx] == values
+
+
+def end_set(seq, mask, start_phenx_id, codec: str = "bit", max_set: int | None = None):
+    """Sorted, sentinel-padded set of end-phenX over sequences starting with
+    ``start_phenx_id``.  ``max_set`` bounds the static output size."""
+    seq = jnp.asarray(seq, jnp.int64).reshape(-1)
+    mask = jnp.asarray(mask, bool).reshape(-1)
+    s, e = encoding.unpack(seq, codec)
+    sel = mask & (s == jnp.int32(start_phenx_id))
+    ends = jnp.where(sel, e.astype(jnp.int64), SENTINEL)
+    ends = jnp.sort(ends)
+    first = jnp.concatenate([jnp.ones(1, bool), ends[1:] != ends[:-1]])
+    ends = jnp.sort(jnp.where(first, ends, SENTINEL))
+    if max_set is not None:
+        ends = ends[:max_set]
+    return ends
+
+
+def transitive_ends_with(seq, mask, start_phenx_id, codec: str = "bit",
+                         max_set: int | None = None):
+    """Mask of sequences whose END phenX is an end of any sequence that
+    STARTS with ``start_phenx_id`` (the paper's combined helper)."""
+    table = end_set(seq, mask, start_phenx_id, codec, max_set)
+    _, e = encoding.unpack(seq, codec)
+    return _membership(e.astype(jnp.int64), table) & jnp.asarray(mask, bool)
+
+
+def per_patient_pair_stats(seq, dur, patient, mask, n_patients: int, n_pairs: int):
+    """For each (patient, sequence-id) group: occurrence count, min/max
+    duration.  Grouping key = (patient, rank of seq id); returns sorted keys
+    plus stats aligned to the sorted layout.  Used by the Post-COVID rules
+    ("occurs only once", "max duration spread < 2 buckets")."""
+    seq = jnp.asarray(seq, jnp.int64).reshape(-1)
+    dur = jnp.asarray(dur, jnp.int32).reshape(-1)
+    patient = jnp.asarray(patient, jnp.int32).reshape(-1)
+    mask = jnp.asarray(mask, bool).reshape(-1)
+    n = seq.shape[0]
+    key = jnp.where(mask, seq, SENTINEL)
+    # lexicographic (patient, seq) grouping; sentinel rows sort to the end
+    pkey = jnp.where(mask, patient, jnp.int32(2**31 - 1))
+    pkey, key, dur = jax.lax.sort((pkey, key, dur), num_keys=2)
+    change = jnp.concatenate(
+        [jnp.ones(1, bool), (key[1:] != key[:-1]) | (pkey[1:] != pkey[:-1])])
+    seg = jnp.cumsum(change) - 1
+    ones = jnp.where(key != SENTINEL, 1, 0).astype(jnp.int32)
+    cnt = jax.ops.segment_sum(ones, seg, num_segments=n)
+    dmin = jax.ops.segment_min(jnp.where(key != SENTINEL, dur, 2**31 - 1), seg, num_segments=n)
+    dmax = jax.ops.segment_max(jnp.where(key != SENTINEL, dur, -1), seg, num_segments=n)
+    return pkey, key, seg, cnt[seg], dmin[seg], dmax[seg], change

@@ -1,0 +1,163 @@
+"""Sparsity screening — sort-based (paper-faithful) and hash-based (scalable).
+
+The paper screens sequences by *patient support*: a sequence is sparse when
+it occurs for fewer than ``threshold`` distinct patients.  Its C++ recipe:
+
+  1. parallel-sort all sequences by id (ips4o);
+  2. linear pass: run boundaries -> per-sequence patient counts;
+  3. mark sparse entries by writing UINT_MAX into the key;
+  4. one more sort; truncate at the first sentinel.
+
+``screen_sorted`` is the exact TPU port of that recipe (lax.sort +
+shifted-compare + segment_sum + sentinel re-sort; static shapes, so
+"truncate" returns a valid-prefix length instead of shrinking).
+
+``screen_hash`` is the *beyond-paper distributed* variant: per-patient
+dedupe, multiply-shift hash into 2^H buckets, scatter-add, one psum over the
+patient-sharded mesh axes.  Collisions merge counts, so the error is
+one-sided — a sparse sequence may survive, a non-sparse one is NEVER
+dropped (property-tested).  This turns a global sort into one all-reduce.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import SENTINEL
+
+# multiply-shift hash constant (odd; splitmix64's golden-gamma)
+_HASH_K = jnp.int64(-7046029254386353131)  # == 0x9E3779B97F4A7C15 mod 2^64
+
+
+class Screened(NamedTuple):
+    """Sort-compacted screening result (paper's post-truncate layout).
+
+    Arrays are full length; the first ``n_kept`` entries are the surviving
+    sequences in sorted-id order, the rest carry the SENTINEL key."""
+
+    seq: jax.Array      # [N] int64, sorted, kept-prefix
+    dur: jax.Array      # [N] int32
+    patient: jax.Array  # [N] int32
+    support: jax.Array  # [N] int32 distinct-patient support (0 on sentinel)
+    n_kept: jax.Array   # scalar int64
+
+
+def _run_flags(keys, patients):
+    """(new-sequence, new-(sequence,patient)) flags on sorted arrays."""
+    seq_change = jnp.concatenate(
+        [jnp.ones(1, bool), keys[1:] != keys[:-1]])
+    pat_change = jnp.concatenate(
+        [jnp.ones(1, bool), (patients[1:] != patients[:-1])]) | seq_change
+    return seq_change, pat_change
+
+
+@functools.partial(jax.jit, static_argnames=())
+def support_counts(seq, patient, mask):
+    """Distinct-patient support per element + unique table.
+
+    Returns (sorted keys, sorted patients, per-element support, unique ids
+    (sentinel-padded, sorted, compacted to front), unique supports,
+    n_unique).
+    """
+    seq = jnp.asarray(seq, jnp.int64).reshape(-1)
+    patient = jnp.asarray(patient, jnp.int32).reshape(-1)
+    mask = jnp.asarray(mask, bool).reshape(-1)
+    n = seq.shape[0]
+    keys = jnp.where(mask, seq, SENTINEL)
+    keys, patient = jax.lax.sort((keys, patient), num_keys=2)
+    seq_change, pat_change = _run_flags(keys, patient)
+    seg = jnp.cumsum(seq_change) - 1
+    seg_support = jax.ops.segment_sum(
+        pat_change.astype(jnp.int32), seg, num_segments=n)
+    support = jnp.where(keys != SENTINEL, seg_support[seg], 0)
+    first = seq_change & (keys != SENTINEL)
+    u_key = jnp.where(first, keys, SENTINEL)
+    u_key, u_support = jax.lax.sort(
+        (u_key, jnp.where(first, support, 0)), num_keys=1)
+    return keys, patient, support, u_key, u_support, jnp.sum(first)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def screen_sorted(seq, dur, patient, mask, threshold) -> Screened:
+    """Paper-faithful sort/mark/re-sort/truncate sparsity screen (exact)."""
+    seq = jnp.asarray(seq, jnp.int64).reshape(-1)
+    dur = jnp.asarray(dur, jnp.int32).reshape(-1)
+    patient = jnp.asarray(patient, jnp.int32).reshape(-1)
+    mask = jnp.asarray(mask, bool).reshape(-1)
+    n = seq.shape[0]
+
+    keys = jnp.where(mask, seq, SENTINEL)
+    keys, patient, dur = jax.lax.sort((keys, patient, dur), num_keys=2)
+    seq_change, pat_change = _run_flags(keys, patient)
+    seg = jnp.cumsum(seq_change) - 1
+    seg_support = jax.ops.segment_sum(
+        pat_change.astype(jnp.int32), seg, num_segments=n)
+    support = seg_support[seg]
+    keep = (support >= threshold) & (keys != SENTINEL)
+
+    # the paper's marking trick: sparse entries get the sentinel key, one
+    # more sort pushes them to the tail, n_kept is the truncation point.
+    marked = jnp.where(keep, keys, SENTINEL)
+    marked, patient, dur, support = jax.lax.sort(
+        (marked, patient, dur, jnp.where(keep, support, 0)), num_keys=2)
+    return Screened(marked, dur, patient, support, jnp.sum(keep))
+
+
+# --- hash-based distributed screen (beyond paper) ---------------------------
+def hash_bucket(seq, n_buckets_log2: int):
+    """Multiply-shift hash of int64 sequence ids into [0, 2^H)."""
+    seq = jnp.asarray(seq, jnp.int64)
+    h = (seq * _HASH_K) >> (64 - n_buckets_log2)
+    return (h & ((1 << n_buckets_log2) - 1)).astype(jnp.int32)
+
+
+def local_bucket_counts(seq, mask, n_buckets_log2: int):
+    """Per-shard distinct-patient bucket counts for row-major [P, T] input.
+
+    Rows are patients; dedupes (patient, sequence) by a row-wise sort before
+    counting, matching the paper's distinct-patient support semantics.
+    """
+    seq = jnp.asarray(seq, jnp.int64)
+    mask = jnp.asarray(mask, bool)
+    P = seq.shape[0]
+    flat = jnp.where(mask, seq, SENTINEL).reshape(P, -1)
+    srt = jnp.sort(flat, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((P, 1), bool), srt[:, 1:] != srt[:, :-1]], axis=1)
+    first &= srt != SENTINEL
+    h = hash_bucket(srt, n_buckets_log2)
+    counts = jnp.zeros(1 << n_buckets_log2, jnp.int32)
+    return counts.at[h.reshape(-1)].add(first.reshape(-1).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets_log2", "axis_names"))
+def screen_hash(seq, mask, threshold, n_buckets_log2: int = 20,
+                axis_names: tuple[str, ...] | None = None):
+    """Keep-mask for [P, T] mined rows; one psum when patient-sharded.
+
+    Inside shard_map pass ``axis_names`` (e.g. ('pod', 'data')) to reduce
+    bucket counts over the patient-sharded axes.  One-sided error under
+    collisions (false-keep only).
+    """
+    counts = local_bucket_counts(seq, mask, n_buckets_log2)
+    if axis_names:
+        counts = jax.lax.psum(counts, axis_names)
+    keep = counts[hash_bucket(seq, n_buckets_log2)] >= threshold
+    return keep & jnp.asarray(mask, bool)
+
+
+def merge_bucket_counts(*counts):
+    """Host-side merge of per-chunk bucket count arrays (chunked pipeline)."""
+    out = counts[0]
+    for c in counts[1:]:
+        out = out + c
+    return out
+
+
+def screen_hash_from_counts(seq, mask, counts, threshold, n_buckets_log2: int):
+    """Apply a pre-merged global bucket-count table to a chunk."""
+    keep = counts[hash_bucket(seq, n_buckets_log2)] >= threshold
+    return keep & jnp.asarray(mask, bool)

@@ -1,0 +1,109 @@
+"""The dbmart: MLHO-format clinical tables, padded patient-major tensors.
+
+The paper's dbmart is a ``(patient_num, date, phenX)`` row table.  tSPM+
+sorts it by (patient, date) so every patient is one contiguous chunk — the
+precondition for its thread-per-patient mining.  On TPU the analogue is a
+*padded patient-major* layout: ``phenx[P, E]``, ``date[P, E]``,
+``nevents[P]`` — each row is one patient's time-sorted events, padded to E.
+The (patient, date) sort happens once here, at ingest (numpy mergesort ≙
+the paper's stable ips4o pass).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.encoding import Vocab, encode_rows
+
+
+@dataclasses.dataclass
+class DBMart:
+    """Padded patient-major numeric dbmart (host-side numpy)."""
+
+    phenx: np.ndarray     # [P, E] int32 (padding: 0 beyond nevents; masked)
+    date: np.ndarray      # [P, E] int32 days; non-decreasing within a row
+    nevents: np.ndarray   # [P]    int32
+    vocab: Vocab | None = None
+
+    @property
+    def n_patients(self) -> int:
+        return self.phenx.shape[0]
+
+    @property
+    def max_events(self) -> int:
+        return self.phenx.shape[1]
+
+    @property
+    def total_events(self) -> int:
+        return int(self.nevents.sum())
+
+    def slice_patients(self, start: int, stop: int, max_events: int | None = None) -> "DBMart":
+        e = int(self.nevents[start:stop].max(initial=0)) if max_events is None else max_events
+        e = max(e, 1)
+        return DBMart(
+            self.phenx[start:stop, :e], self.date[start:stop, :e],
+            self.nevents[start:stop], self.vocab,
+        )
+
+    def valid_mask(self) -> np.ndarray:
+        return np.arange(self.max_events)[None, :] < self.nevents[:, None]
+
+
+def from_rows(
+    patients, dates, phenx, vocab: Vocab | None = None, pad_multiple: int = 8
+) -> DBMart:
+    """Row table -> padded DBMart.  Sorts by (patient, date), stable.
+
+    ``pad_multiple`` rounds E up for TPU-friendly tiling.
+    """
+    pid, date, xid, vocab = encode_rows(patients, dates, phenx, vocab)
+    order = np.lexsort((np.arange(len(pid)), date, pid))  # stable (patient, date)
+    pid, date, xid = pid[order], date[order], xid[order]
+
+    n_pat = int(pid.max()) + 1 if len(pid) else 0
+    counts = np.bincount(pid, minlength=n_pat).astype(np.int32)
+    e_max = int(counts.max(initial=1))
+    e_max = -(-e_max // pad_multiple) * pad_multiple
+
+    phenx_arr = np.zeros((n_pat, e_max), np.int32)
+    date_arr = np.zeros((n_pat, e_max), np.int32)
+    starts = np.zeros(n_pat + 1, np.int64)
+    np.cumsum(counts, out=starts[1:])
+    cols = np.arange(len(pid)) - starts[pid]
+    phenx_arr[pid, cols] = xid
+    date_arr[pid, cols] = date
+    # pad dates with the row's last date so padded durations are 0, not huge
+    last = date_arr[np.arange(n_pat), np.maximum(counts - 1, 0)]
+    pad = np.arange(e_max)[None, :] >= counts[:, None]
+    date_arr = np.where(pad, last[:, None], date_arr)
+    return DBMart(phenx_arr, date_arr, counts, vocab)
+
+
+def first_occurrence_filter(db: DBMart) -> DBMart:
+    """Keep only the first occurrence of each phenX per patient.
+
+    The paper's comparison benchmark applies this (protocol of the AD study)
+    to bound the sequence count for the original tSPM.
+    """
+    P, E = db.phenx.shape
+    phenx = np.zeros_like(db.phenx)
+    date = np.zeros_like(db.date)
+    nevents = np.zeros_like(db.nevents)
+    for p in range(P):
+        n = int(db.nevents[p])
+        seen: set[int] = set()
+        k = 0
+        for i in range(n):
+            x = int(db.phenx[p, i])
+            if x not in seen:
+                seen.add(x)
+                phenx[p, k] = x
+                date[p, k] = db.date[p, i]
+                k += 1
+        nevents[p] = k
+        if k:
+            date[p, k:] = date[p, k - 1]
+    e_max = max(int(nevents.max(initial=1)), 1)
+    e_max = -(-e_max // 8) * 8
+    return DBMart(phenx[:, :e_max], date[:, :e_max], nevents, db.vocab)

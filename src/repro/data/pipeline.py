@@ -1,0 +1,97 @@
+"""Distributed input pipeline: patient-sharded mining + batch placement.
+
+Mirrors the mesh of the model: patients are sharded over ('pod', 'data');
+each shard mines its chunk locally (the OpenMP-thread analogue) and the
+global sparsity screen is the single hash-psum (core/sparsity.screen_hash).
+
+Straggler mitigation: mining chunks are adaptively sized (core/chunking) so
+per-shard work is balanced by *pair count* rather than patient count — a
+patient with 4x the events costs 16x the pairs, which is exactly the
+imbalance the paper's per-patient OpenMP scheduling suffers from.  The
+``ChunkScheduler`` below implements work-stealing over chunk queues for the
+host-side (file-based) mode; on-device, balance comes from sorting patients
+by event count before sharding (longest-processing-time-first heuristic).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import chunking
+from repro.data.dbmart import DBMart
+
+
+def balance_patients(nevents: np.ndarray, n_shards: int) -> np.ndarray:
+    """LPT assignment of patients to shards by pair-count cost.
+
+    Returns a permutation such that contiguous equal slices of the permuted
+    patient axis have near-equal total n(n-1)/2 cost."""
+    cost = nevents.astype(np.int64) * (nevents.astype(np.int64) - 1) // 2
+    order = np.argsort(-cost)
+    loads = np.zeros(n_shards, np.int64)
+    buckets: list[list[int]] = [[] for _ in range(n_shards)]
+    per = len(nevents) // n_shards
+    for p in order:
+        k = int(np.argmin(np.where(
+            np.asarray([len(b) for b in buckets]) < per, loads, np.iinfo(np.int64).max)))
+        buckets[k].append(int(p))
+        loads[k] += int(cost[p])
+    return np.concatenate([np.asarray(b, np.int64) for b in buckets])
+
+
+def shard_batch(batch: dict, mesh, batch_axes=("pod", "data")) -> dict:
+    """Host batch -> device arrays sharded over the batch axes of the mesh."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    out = {}
+    for k, v in batch.items():
+        spec = jax.sharding.PartitionSpec(axes, *([None] * (v.ndim - 1)))
+        out[k] = jax.device_put(v, jax.sharding.NamedSharding(mesh, spec))
+    return out
+
+
+class ChunkScheduler:
+    """Work-stealing queue over mining chunks (host-side, file-based mode).
+
+    Worker hosts pop chunks; a straggling host's remaining chunks are
+    visible to idle peers because the queue is global.  Single-process here;
+    at fleet scale the queue is any shared KV (the interface is the same).
+    """
+
+    def __init__(self, db: DBMart, budget_bytes: int):
+        self.db = db
+        self.chunks = chunking.plan_chunks(np.asarray(db.nevents), budget_bytes)
+        self._lock = threading.Lock()
+        self._next = 0
+        self.completed: list[int] = []
+
+    def steal(self) -> chunking.Chunk | None:
+        with self._lock:
+            if self._next >= len(self.chunks):
+                return None
+            c = self.chunks[self._next]
+            self._next += 1
+            return c
+
+    def run(self, worker: Callable[[chunking.Chunk], object], n_workers: int = 1):
+        results = []
+        rlock = threading.Lock()
+
+        def loop(wid: int):
+            while True:
+                c = self.steal()
+                if c is None:
+                    return
+                r = worker(c)
+                with rlock:
+                    results.append(r)
+                    self.completed.append(wid)
+
+        threads = [threading.Thread(target=loop, args=(w,)) for w in range(n_workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return results

@@ -1,0 +1,98 @@
+"""Logical-axis sharding: rules context + activation constraints.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, ("batch", "seq", None))``).  The launcher installs a rule
+set mapping logical names to mesh axes; outside any rule context the
+annotations are no-ops, so CPU unit tests never see a mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar("axis_rules",
+                                                        default=None)
+
+# default logical -> mesh-axis mapping (single- and multi-pod meshes)
+def default_rules(mesh) -> dict:
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    return {
+        "batch": batch if len(batch) > 1 else (batch[0] if batch else None),
+        "model": "model" if "model" in axes else None,
+        "fsdp": "data" if "data" in axes else None,
+        "seq": None,            # flipped to ('data',) for long-context SP
+        "seq_res": None,        # Megatron-SP residual (cfg.sp_residual)
+        "expert": "model" if "model" in axes else None,
+    }
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, rules: dict | None = None):
+    token = _RULES.set((mesh, rules or default_rules(mesh)))
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules():
+    return _RULES.get()
+
+
+def logical_to_pspec(names, rules) -> P:
+    return P(*[rules.get(n) if isinstance(n, str) else n for n in names])
+
+
+def constrain(x, names):
+    ctx = _RULES.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, logical_to_pspec(names, rules)))
+
+
+def sanitize_pspec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes a dim is not divisible by (small weights replicate).
+    Mirrors the fallback rule every production sharder needs: a [768, 8]
+    gate projection cannot shard 8 ways over a 16-wide 'model' axis."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None if i >= len(shape) else entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def sanitize_tree(spec_tree, struct_tree, mesh):
+    return jax.tree.map(
+        lambda s, x: sanitize_pspec(s, x.shape, mesh), spec_tree, struct_tree,
+        is_leaf=lambda v: isinstance(v, P))
+
+
+def param_shardings(mesh, spec_tree, struct_tree=None):
+    """PartitionSpec tree (from model init) -> NamedSharding tree,
+    sanitized against the struct shapes when provided."""
+    if struct_tree is not None:
+        spec_tree = sanitize_tree(spec_tree, struct_tree, mesh)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda v: isinstance(v, P))
+
+
+def fsdp_axis_for(cfg):
+    if not cfg.fsdp:
+        return None
+    # with TP disabled the 'model' axis would idle — fold it into FSDP so
+    # block weights shard 256-way (grad sync shrinks accordingly)
+    return "data" if cfg.tp_internals else ("data", "model")

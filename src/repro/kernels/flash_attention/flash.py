@@ -1,0 +1,115 @@
+"""Blocked online-softmax attention (flash) Pallas kernel.
+
+The LM-side compute hot spot for train_4k / prefill_32k shapes.  Supports
+causal masking, sliding windows (gemma2 local layers) and attention-logit
+softcapping (gemma2), and GQA via head-index mapping in the k/v BlockSpecs.
+
+Grid: (batch * q_heads, Sq/bq, Skv/bk), kv innermost; the (acc, m, l)
+online-softmax state lives in VMEM scratch and the output tile is written
+once on the final kv step.  Block sizes default to 128 x 128 (MXU-aligned);
+the q/k/v tiles + f32 accumulator stay well under VMEM at D <= 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  softcap: float | None, bq: int, bk: int, n_kv: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[:] = jnp.zeros_like(acc_ref)
+        m_ref[:] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[:] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [bq, D]
+    k = k_ref[0].astype(jnp.float32)          # [bk, D]
+    v = v_ref[0].astype(jnp.float32)          # [bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qi = pl.program_id(1) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0][:, None]                       # [bq, 1]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1)[:, None])
+    p = jnp.exp(s - m_cur)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = alpha * l_ref[:, 0][:, None] + p.sum(axis=1)[:, None]
+    acc_ref[:] = acc_ref[:] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:] = jnp.broadcast_to(m_cur, m_ref.shape)
+    l_ref[:] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l = l_ref[:, 0][:, None]
+        o_ref[0] = (acc_ref[:] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    bq: int = 128, bk: int = 128, interpret: bool = False):
+    """q [B, Hq, Sq, D], k/v [B, Hkv, Skv, D] -> o [B, Hq, Sq, D].
+
+    GQA: Hq must be a multiple of Hkv; kv blocks are indexed by h // group.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    if scale is None:
+        scale = D ** -0.5
+    qr = q.reshape(B * Hq, Sq, D)
+    kr = k.reshape(B * Hkv, Skv, D)
+    vr = v.reshape(B * Hkv, Skv, D)
+    n_kv = Skv // bk
+
+    def kv_index(bh, i, j):
+        return (bh // group, j, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, Sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, D), kv_index),
+            pl.BlockSpec((1, bk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, Sq, D)

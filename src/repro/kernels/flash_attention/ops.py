@@ -1,0 +1,26 @@
+"""Dispatching attention wrapper used by the model zoo.
+
+impl: 'flash' (Pallas kernel), 'xla' (reference einsum), 'auto' (flash on
+TPU, xla elsewhere — interpret-mode flash is numerically exact but slow on
+CPU, so models default to xla in tests while kernel tests pin interpret).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash as _k
+from repro.kernels.flash_attention import ref as _ref
+
+
+def attention(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+              impl: str = "auto", interpret: bool | None = None):
+    if impl == "auto":
+        impl = "flash" if jax.default_backend() == "tpu" else "xla"
+    if impl == "flash":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _k.flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  interpret=interpret)
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale)

@@ -1,0 +1,31 @@
+"""Naive full-softmax attention oracle (f32) with the same mask options."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, scale: float | None = None):
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    o = jnp.einsum("bhqk,bhkd->bhqd",
+                   p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30), vq)
+    return o.astype(q.dtype)

@@ -1,0 +1,45 @@
+"""jit'd wrapper: distinct-(patient, sequence) bucket counts via the kernel.
+
+Dispatch: compare-and-reduce Pallas kernel for tables <= 2^14 buckets
+(VMEM-resident accumulators, no serialized scatter); XLA scatter-add above.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsity
+from repro.core.encoding import SENTINEL
+from repro.kernels.seq_hist import ref as _ref
+from repro.kernels.seq_hist import seq_hist as _k
+
+KERNEL_MAX_LOG2 = 14
+
+
+def _dedupe_rows(seq, mask):
+    """Row-wise (patient) dedupe: sorted ids + first-occurrence flags."""
+    seq = jnp.asarray(seq, jnp.int64)
+    mask = jnp.asarray(mask, bool)
+    P = seq.shape[0]
+    flat = jnp.where(mask, seq, SENTINEL).reshape(P, -1)
+    srt = jnp.sort(flat, axis=1)
+    first = jnp.concatenate(
+        [jnp.ones((P, 1), bool), srt[:, 1:] != srt[:, :-1]], axis=1)
+    first &= srt != SENTINEL
+    return srt, first
+
+
+def bucket_counts(seq, mask, n_buckets_log2: int,
+                  interpret: bool | None = None, force_kernel: bool = False):
+    """Distinct-patient bucket counts for [P, T]-shaped mined ids."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    srt, first = _dedupe_rows(seq, mask)
+    h = sparsity.hash_bucket(srt, n_buckets_log2)
+    if n_buckets_log2 > KERNEL_MAX_LOG2 and not force_kernel:
+        return _ref.hist_ref(h, first, 1 << n_buckets_log2)
+    P, T = h.shape
+    rows = 8 if P % 8 == 0 else (4 if P % 4 == 0 else (2 if P % 2 == 0 else 1))
+    bt = min(512, 1 << n_buckets_log2)
+    return _k.hist(h, first, 1 << n_buckets_log2, bt=bt, rows=rows,
+                   interpret=interpret)

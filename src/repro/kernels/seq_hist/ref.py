@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the histogram kernel."""
+import jax.numpy as jnp
+
+
+def hist_ref(h, mask, n_buckets: int):
+    h = jnp.asarray(h, jnp.int32).reshape(-1)
+    m = jnp.asarray(mask, bool).reshape(-1)
+    return jnp.zeros(n_buckets, jnp.int32).at[h].add(m.astype(jnp.int32))

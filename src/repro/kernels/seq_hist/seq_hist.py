@@ -1,0 +1,58 @@
+"""Pallas TPU histogram kernel for the hash-based sparsity screen.
+
+The distributed screen (core/sparsity.screen_hash) needs bucket counts of
+hashed sequence ids.  TPU has no native vector scatter: XLA lowers
+scatter-add to a serialized loop, so for moderate table sizes the
+TPU-idiomatic histogram is *compare-and-reduce*: for each bucket tile,
+count matches of the id tile against the bucket iota — dense VPU work that
+vectorizes perfectly and keeps the accumulator tile VMEM-resident.
+
+Work is O(N * B): the right regime is B <= ~2^14 (on-device screening
+tables).  ops.py picks scatter-add for larger tables; the tradeoff is
+recorded in DESIGN.md.  Grid = (bucket-tiles, row-tiles) with rows
+innermost so each accumulator tile sees consecutive writes (the Pallas
+revisiting rule).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(h_ref, m_ref, out_ref, *, bt: int, rows: int):
+    b = pl.program_id(0)
+    buckets = b * bt + jax.lax.broadcasted_iota(jnp.int32, (1, bt), 1)
+    h = h_ref[:]                                      # [rows, T]
+    m = m_ref[:]
+    eq = (h[:, :, None] == buckets[None, :, :]) & m[:, :, None]
+    partial = jnp.sum(eq.astype(jnp.int32), axis=(0, 1))  # [bt]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[:] = jnp.zeros_like(out_ref)
+
+    out_ref[:] += partial[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "bt", "rows", "interpret"))
+def hist(h, mask, n_buckets: int, bt: int = 512, rows: int = 8,
+         interpret: bool = False):
+    """Bucket counts [n_buckets] of ids h [R, T] under mask (int32)."""
+    R, T = h.shape
+    assert R % rows == 0 and n_buckets % bt == 0, (R, rows, n_buckets, bt)
+    grid = (n_buckets // bt, R // rows)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, bt=bt, rows=rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, T), lambda b, r: (r, 0)),
+            pl.BlockSpec((rows, T), lambda b, r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt), lambda b, r: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((1, n_buckets), jnp.int32),
+        interpret=interpret,
+    )(h.astype(jnp.int32), mask)
+    return out[0]

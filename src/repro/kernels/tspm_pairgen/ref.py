@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the pair-generation kernel (dense layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairgen_planes_ref(phenx, date, nevents):
+    """Reference (start, end, duration, mask) planes, each [P, E, E]."""
+    phenx = jnp.asarray(phenx, jnp.int32)
+    date = jnp.asarray(date, jnp.int32)
+    nevents = jnp.asarray(nevents, jnp.int32)
+    E = phenx.shape[-1]
+    ar = jnp.arange(E, dtype=jnp.int32)
+    mask = (ar[:, None] < ar[None, :])[None] & \
+        (ar[None, None, :] < nevents[:, None, None])
+    s = jnp.where(mask, phenx[:, :, None], -1)
+    e = jnp.where(mask, phenx[:, None, :], -1)
+    dur = jnp.where(mask, date[:, None, :] - date[:, :, None], 0)
+    return s, e, dur, mask

@@ -1,0 +1,36 @@
+"""Production meshes.  A FUNCTION, not a module constant — importing this
+module never touches jax device state (the dry-run sets XLA_FLAGS first).
+
+Single pod: 16 x 16 = 256 chips ('data', 'model').
+Multi-pod:  2 x 16 x 16 = 512 chips ('pod', 'data', 'model') — 'pod' is the
+slow (DCN) axis and carries only the gradient all-reduce (optionally
+int8-compressed, distributed/compression.py).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (see launch/dryrun.py)")
+    # more devices than needed (e.g. 512 forced, single-pod mesh): subset
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests on forced host devices."""
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(shape), axes)

@@ -1,0 +1,57 @@
+"""Serving launcher: batched generation over the wave scheduler.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tspm-mlho --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serving.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tspm-mlho")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mdl = model_lib.build(cfg)
+    params, _ = mdl.init(jax.random.PRNGKey(args.seed))
+    print(f"serving {args.arch}: params="
+          f"{model_lib.param_count(params):,} batch={args.batch}")
+
+    eng = ServeEngine(mdl, params, batch_size=args.batch,
+                      max_len=args.max_len, temperature=args.temperature)
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        prompt = rng.integers(4, cfg.vocab_size, args.prompt_len) \
+            .astype(np.int32)
+        eng.submit(Request(i, prompt, max_new_tokens=args.max_new))
+
+    t0 = time.time()
+    results = eng.run(jax.random.PRNGKey(args.seed))
+    dt = time.time() - t0
+    total = sum(len(v) for v in results.values())
+    print(f"served {len(results)} requests, {total} tokens "
+          f"in {dt:.2f}s ({total/dt:.1f} tok/s)")
+    for rid in sorted(results)[:4]:
+        print(f"  req {rid}: {results[rid][:12].tolist()} ...")
+    return results
+
+
+if __name__ == "__main__":
+    main()

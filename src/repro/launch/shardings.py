@@ -1,0 +1,86 @@
+"""Explicit PartitionSpecs for batches and decode caches, per family.
+
+Params specs come from model init; these cover the *other* step inputs.
+``batch_axes`` is ('pod','data') on the multi-pod mesh, ('data',) single-pod.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import ssm_common
+
+
+def batch_axes_of(mesh, cfg=None):
+    axes = ("pod", "data") if cfg is None or cfg.tp_internals \
+        else ("pod", "data", "model")   # TP off: pure wide DP
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def batch_pspecs(cfg, batch_tree, mesh):
+    ba = batch_axes_of(mesh, cfg)
+    b = ba if len(ba) > 1 else (ba[0] if ba else None)
+
+    def spec(path_leaf):
+        arr = path_leaf
+        return P(b, *([None] * (arr.ndim - 1)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def _attn_cache_spec(b, mode="heads"):
+    """KV cache layout [L, B, S, Hkv, hd]: shard heads over 'model'
+    (classic TP) or the SEQUENCE dim ('seq': flash-decode style — XLA turns
+    the softmax over the sharded dim into tiny stat reductions instead of
+    gathering the cache; see EXPERIMENTS.md §Perf iteration 1)."""
+    if mode == "seq":
+        return {"k": P(None, b, "model", None, None),
+                "v": P(None, b, "model", None, None),
+                "pos": P(None)}
+    return {"k": P(None, b, None, "model", None),
+            "v": P(None, b, None, "model", None),
+            "pos": P(None)}
+
+
+def cache_pspecs(cfg, caches, mesh):
+    """Spec tree matching model.init_caches output for each family."""
+    ba = batch_axes_of(mesh, cfg)
+    b = ba if len(ba) > 1 else (ba[0] if ba else None)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return tuple(_attn_cache_spec(b, cfg.decode_kv_shard)
+                     for _ in caches)
+    if fam == "xlstm":
+        tp = "model" if cfg.tp_internals else None
+        out = []
+        for c in caches:
+            if isinstance(c, ssm_common.ScanState):
+                out.append(ssm_common.ScanState(
+                    P(None, b, None, None, tp), P(None, b, None, None)))
+            else:  # slstm dict h/c/n/m: [L, B, H, dh]
+                out.append({k: P(None, b, None, tp) for k in c})
+        return tuple(out)
+    if fam == "hybrid":
+        return {
+            "mamba": (
+                P(None, None, b, None, "model"),       # conv state
+                ssm_common.ScanState(
+                    P(None, None, b, "model", None, None),
+                    P(None, None, b, "model", None)),
+            ),
+            "attn": _attn_cache_spec(b, cfg.decode_kv_shard),
+        }
+    if fam == "encdec":
+        return {"attn": _attn_cache_spec(b, cfg.decode_kv_shard),
+                "memory": P(b, None, None)}
+    raise ValueError(fam)
+
+
+def to_shardings(mesh, spec_tree, struct_tree=None):
+    from repro.distributed.sharding import sanitize_tree
+
+    if struct_tree is not None:
+        spec_tree = sanitize_tree(spec_tree, struct_tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda v: isinstance(v, P))

@@ -1,0 +1,74 @@
+"""Per-(arch x shape) input specs: ShapeDtypeStructs for the dry-run,
+concrete random batches for smoke tests.  Modality frontends are stubs —
+[audio]/[vlm] entries receive precomputed frame/patch embeddings here."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _mk(shape, dtype, concrete, rng, kind="normal", maxval=None):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if kind == "tokens":
+        return jnp.asarray(rng.integers(0, maxval, shape), dtype)
+    if kind == "ones":
+        return jnp.ones(shape, dtype)
+    return jnp.asarray(rng.standard_normal(shape) * 0.1, dtype)
+
+
+def train_batch(cfg: ModelConfig, shape: ShapeConfig, *, concrete=False,
+                seed=0):
+    """Training/prefill inputs for one global batch."""
+    rng = np.random.default_rng(seed) if concrete else None
+    b, s = shape.global_batch, shape.seq_len
+    v = cfg.vocab_size
+    if cfg.family == "encdec":
+        ss = st = s // 2
+        return {
+            "src_embeds": _mk((b, ss, cfg.d_model), jnp.dtype(cfg.dtype),
+                              concrete, rng),
+            "tokens": _mk((b, st), jnp.int32, concrete, rng, "tokens", v),
+            "labels": _mk((b, st), jnp.int32, concrete, rng, "tokens", v),
+            "loss_mask": _mk((b, st), jnp.bool_, concrete, rng, "ones"),
+        }
+    if cfg.family == "vlm":
+        st = max(s - cfg.n_patches, 8)
+        return {
+            "patch_embeds": _mk((b, cfg.n_patches, cfg.frontend_dim),
+                                jnp.dtype(cfg.dtype), concrete, rng),
+            "tokens": _mk((b, st), jnp.int32, concrete, rng, "tokens", v),
+            # labels cover the full (patch + text) sequence
+            "labels": _mk((b, st + cfg.n_patches), jnp.int32, concrete, rng,
+                          "tokens", v),
+            "loss_mask": _mk((b, st + cfg.n_patches), jnp.bool_, concrete,
+                             rng, "ones"),
+        }
+    return {
+        "tokens": _mk((b, s), jnp.int32, concrete, rng, "tokens", v),
+        "labels": _mk((b, s), jnp.int32, concrete, rng, "tokens", v),
+        "loss_mask": _mk((b, s), jnp.bool_, concrete, rng, "ones"),
+    }
+
+
+def decode_batch(cfg: ModelConfig, shape: ShapeConfig, *, concrete=False,
+                 seed=0):
+    """One-token decode inputs (the KV cache itself comes from
+    model.init_caches and is an argument of serve_step)."""
+    rng = np.random.default_rng(seed) if concrete else None
+    b = shape.global_batch
+    batch = {"tokens": _mk((b, 1), jnp.int32, concrete, rng, "tokens",
+                           cfg.vocab_size)}
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, model):
+    """ShapeDtypeStructs of the decode cache at this shape."""
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        lambda: model.init_caches(b, s, src_len=s // 2
+                                  if cfg.family == "encdec" else None))
+    return caches

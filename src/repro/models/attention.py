@@ -1,0 +1,184 @@
+"""GQA attention: train/prefill (blocked, flash-style) + KV-cache decode.
+
+Three implementations:
+  * 'flash'  — the Pallas kernel (kernels/flash_attention) on TPU;
+  * 'xla'    — blocked lax.scan over query chunks with an in-chunk softmax:
+               never materializes the [Sq, Skv] score matrix, so the 32k
+               prefill cells compile with bounded HBM (the pure-jnp flash);
+  * decode   — one-position einsum over the cache (linear, no blocking).
+
+GQA is computed grouped ('b h g q d' x 'b h k d') — no KV head repeat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import linear, linear_init
+from repro.models import runtime_flags
+
+NEG_INF = -1e30
+
+
+def init(rng, cfg, fsdp_axis, cross: bool = False):
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    r = jax.random.split(rng, 4)
+    dtype = layers.dt(cfg)
+    p, s = {}, {}
+    p["wq"], s["wq"] = linear_init(r[0], d, h * hd, dtype, P(fsdp_axis, "model"),
+                                   bias=cfg.qkv_bias)
+    p["wk"], s["wk"] = linear_init(r[1], d, hk * hd, dtype, P(fsdp_axis, "model"),
+                                   bias=cfg.qkv_bias)
+    p["wv"], s["wv"] = linear_init(r[2], d, hk * hd, dtype, P(fsdp_axis, "model"),
+                                   bias=cfg.qkv_bias)
+    p["wo"], s["wo"] = linear_init(r[3], h * hd, d, dtype, P("model", fsdp_axis))
+    return p, s
+
+
+def _split_heads(x, n):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _sdpa_chunk(q, k, v, *, scale, softcap, causal, window, q_start, kv_len):
+    """q [B,Hkv,G,Cq,hd]; k/v [B,Hkv,Skv,hd] -> out [B,Hkv,G,Cq,hd] (f32)."""
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    cq, skv = q.shape[3], k.shape[2]
+    qi = q_start + jnp.arange(cq, dtype=jnp.int32)[:, None]
+    kj = jnp.arange(skv, dtype=jnp.int32)[None, :]
+    mask = kj < kv_len
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+
+
+def blocked_sdpa(q, k, v, *, causal=True, window=None, softcap=None,
+                 scale=None, q_chunk=512, kv_len=None):
+    """q [B,Sq,H,hd], k/v [B,Skv,Hkv,hd] -> [B,Sq,H,hd] without S^2 HBM."""
+    b, sq, h, hd = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    if scale is None:
+        scale = hd ** -0.5
+    if kv_len is None:
+        kv_len = skv
+    kt = jnp.swapaxes(k, 1, 2)                       # [B,Hkv,Skv,hd]
+    vt = jnp.swapaxes(v, 1, 2)
+    qt = q.reshape(b, sq, hk, g, hd).transpose(0, 2, 3, 1, 4)  # [B,Hkv,G,Sq,hd]
+
+    c = min(q_chunk, sq)
+    if sq % c:
+        c = sq  # irregular small inputs: single chunk
+    n_chunks = sq // c
+
+    def step(_, i):
+        qc = jax.lax.dynamic_slice_in_dim(qt, i * c, c, axis=3)
+        oc = _sdpa_chunk(qc, kt, vt, scale=scale, softcap=softcap,
+                         causal=causal, window=window, q_start=i * c,
+                         kv_len=kv_len)
+        return None, oc
+
+    if n_chunks == 1:
+        _, o = step(None, jnp.int32(0))
+        o = o[None]
+    else:
+        _, o = jax.lax.scan(step, None, jnp.arange(n_chunks, dtype=jnp.int32),
+                            unroll=runtime_flags.scan_unroll())
+    # o [n, B,Hkv,G,c,hd] -> [B,Sq,H,hd]
+    o = jnp.moveaxis(o, 0, 3).reshape(b, hk, g, sq, hd)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def full_attention(q, k, v, cfg, *, causal, window, impl=None, kv_len=None):
+    impl = impl or cfg.attn_impl
+    if impl == "auto":
+        impl = "flash" if jax.default_backend() == "tpu" else "xla"
+    if impl == "flash" and q.shape[1] > 1:
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        o = flash_ops.attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+            causal=causal, window=window, softcap=cfg.attn_softcap,
+            impl="flash")
+        return jnp.swapaxes(o, 1, 2)
+    return blocked_sdpa(q, k, v, causal=causal, window=window,
+                        softcap=cfg.attn_softcap, kv_len=kv_len)
+
+
+def apply(p, x, cfg, *, positions, causal=True, window=None, cache=None,
+          memory=None, impl=None):
+    """Self- or cross-attention.
+
+    cache: None (full-seq) or dict {k, v [B,Smax,Hkv,hd], pos scalar} for
+    one-step decode (x is [B, 1, D]).  memory: encoder output for cross
+    attention (keys/values come from it; no rope, no causal mask).
+    """
+    hk, hd = cfg.n_kv_heads, cfg.hd
+    q = _split_heads(linear(p["wq"], x), cfg.n_heads)
+    src = memory if memory is not None else x
+    k = _split_heads(linear(p["wk"], src), hk)
+    v = _split_heads(linear(p["wv"], src), hk)
+
+    if memory is None:  # rope only for self-attention
+        cos, sin = layers.rope_angles(positions, hd, cfg.rope_fraction,
+                                      cfg.rope_theta)
+        q = layers.apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = layers.apply_rope(k, cos, sin, cfg.rope_fraction)
+
+    if cache is not None:
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+            cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+            cache["v"].dtype), pos, axis=1)
+        if x.shape[1] == 1:  # one-step decode
+            new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+            o = decode_attention(q, ck, cv, cfg, pos=pos, window=window)
+        else:                # prefill: bulk-fill cache, full causal attention
+            new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
+            o = full_attention(q, k, v, cfg, causal=causal, window=window,
+                               impl=impl)
+        return linear(p["wo"], o.reshape(*x.shape[:2], -1)), new_cache
+
+    o = full_attention(q, k, v, cfg, causal=causal, window=window, impl=impl)
+    return linear(p["wo"], o.reshape(*x.shape[:2], -1)), None
+
+
+def decode_attention(q, k, v, cfg, *, pos, window=None):
+    """q [B,1,H,hd] vs cache k/v [B,Smax,Hkv,hd]; linear in Smax."""
+    b, _, h, hd = q.shape
+    smax, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, 1, hk, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    if cfg.attn_softcap is not None:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    kj = jnp.arange(smax, dtype=jnp.int32)
+    mask = kj <= pos
+    if window is not None:
+        mask &= (pos - kj) < window
+    s = jnp.where(mask[None, None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return o.reshape(b, 1, h, hd)
+
+
+def init_cache(cfg, batch, max_len, dtype=None, n_kv=None):
+    hk = n_kv or cfg.n_kv_heads
+    dtype = dtype or layers.dt(cfg)
+    return {
+        "k": jnp.zeros((batch, max_len, hk, cfg.hd), dtype),
+        "v": jnp.zeros((batch, max_len, hk, cfg.hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,140 @@
+"""Encoder-decoder backbone (seamless-m4t-v2 text/speech transformer).
+
+The modality frontend is a STUB per the assignment: ``src_embeds``
+[B, S_src, d_model] arrive precomputed (speech frames / text embeddings);
+the decoder is a standard causal transformer with cross-attention.
+"24L" is interpreted as 24 encoder + 24 decoder layers (the published
+large-v2 text stack); RoPE replaces the original relative positions
+(DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, fsdp_axis_for
+from repro.models import attention, layers
+from repro.models.layers import rmsnorm
+from repro.models import runtime_flags
+
+
+def enc_layer_init(rng, cfg, fsdp_axis):
+    r = jax.random.split(rng, 2)
+    dtype = layers.dt(cfg)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    p["attn"], s["attn"] = attention.init(r[0], cfg, fsdp_axis)
+    p["ln2"], s["ln2"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    p["mlp"], s["mlp"] = layers.mlp_init(r[1], cfg.d_model, cfg.d_ff, dtype,
+                                         fsdp_axis, cfg.mlp_act)
+    return p, s
+
+
+def dec_layer_init(rng, cfg, fsdp_axis):
+    r = jax.random.split(rng, 3)
+    dtype = layers.dt(cfg)
+    p, s = enc_layer_init(r[0], cfg, fsdp_axis)
+    p["ln_x"], s["ln_x"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    p["xattn"], s["xattn"] = attention.init(r[1], cfg, fsdp_axis, cross=True)
+    return p, s
+
+
+def init(rng, cfg):
+    fsdp_axis = fsdp_axis_for(cfg)
+    r = jax.random.split(rng, 4)
+    p, s = {}, {}
+    p["embed"], s["embed"] = layers.embed_init(
+        r[0], cfg.vocab_size, cfg.d_model, layers.dt(cfg), fsdp_axis)
+    p["enc"], s["enc"] = layers.stack_inits(
+        r[1], cfg.n_enc_layers,
+        functools.partial(enc_layer_init, cfg=cfg, fsdp_axis=fsdp_axis))
+    p["dec"], s["dec"] = layers.stack_inits(
+        r[2], cfg.n_dec_layers,
+        functools.partial(dec_layer_init, cfg=cfg, fsdp_axis=fsdp_axis))
+    p["ln_enc"], s["ln_enc"] = layers.rmsnorm_init(cfg.d_model, layers.dt(cfg))
+    p["ln_f"], s["ln_f"] = layers.rmsnorm_init(cfg.d_model, layers.dt(cfg))
+    return p, s
+
+
+def encode(p, src_embeds, cfg):
+    x = src_embeds.astype(layers.dt(cfg))
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(x, ("batch", None, None))
+
+    def body(x, lp):
+        h, _ = attention.apply(lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                               cfg, positions=positions, causal=False)
+        x = x + h
+        x = x + layers.mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                           cfg.mlp_act)
+        return constrain(x, ("batch", None, None)), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, p["enc"], unroll=runtime_flags.scan_unroll())
+    return rmsnorm(p["ln_enc"], x, cfg.norm_eps)
+
+
+def _dec_layer(lp, x, memory, cfg, positions, cache=None):
+    h, new_cache = attention.apply(
+        lp["attn"], rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, cache=cache)
+    x = x + h
+    hx, _ = attention.apply(lp["xattn"], rmsnorm(lp["ln_x"], x, cfg.norm_eps),
+                            cfg, positions=positions, causal=False,
+                            memory=memory)
+    x = x + hx
+    x = x + layers.mlp(lp["mlp"], rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                       cfg.mlp_act)
+    return constrain(x, ("batch", None, None)), new_cache
+
+
+def apply(p, batch, cfg, *, mode="train", caches=None):
+    """batch: src_embeds [B,Ss,D] (+ memory cached for decode),
+    tgt tokens [B,St]."""
+    with_cache = caches is not None
+    if with_cache and mode == "decode":
+        memory = caches["memory"]
+    else:
+        memory = encode(p, batch["src_embeds"], cfg)
+    x = layers.embed_lookup(p["embed"], batch["tokens"], cfg.embed_scale)
+    b, st = x.shape[:2]
+    if mode == "decode":
+        pos0 = caches["attn"]["pos"][0]
+        positions = jnp.full((b, 1), pos0, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(st, dtype=jnp.int32), (b, st))
+
+    def body(x, xs):
+        lp, lc = xs if with_cache else (xs, None)
+        x, nc = _dec_layer(lp, x, memory, cfg, positions, lc)
+        return x, nc
+
+    if cfg.remat != "none" and mode == "train":
+        body = jax.checkpoint(body)
+    xs = (p["dec"], caches["attn"]) if with_cache else p["dec"]
+    x, new_caches = jax.lax.scan(body, x, xs,
+                                 unroll=runtime_flags.scan_unroll())
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = layers.embed_logits(
+        p["embed"], rmsnorm(p["ln_f"], x, cfg.norm_eps), cfg.final_softcap)
+    if with_cache:
+        return logits, {"attn": new_caches, "memory": memory}
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_caches(cfg, batch, max_len, src_len, dtype=None):
+    one = attention.init_cache(cfg, batch, max_len, dtype)
+    return {
+        "attn": {
+            "k": jnp.zeros((cfg.n_dec_layers,) + one["k"].shape, one["k"].dtype),
+            "v": jnp.zeros((cfg.n_dec_layers,) + one["v"].shape, one["v"].dtype),
+            "pos": jnp.zeros((cfg.n_dec_layers,), jnp.int32),
+        },
+        "memory": jnp.zeros((batch, src_len, cfg.d_model), dtype or
+                            layers.dt(cfg)),
+    }

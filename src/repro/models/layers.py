@@ -1,0 +1,119 @@
+"""Functional building blocks: params are nested dicts, every init returns
+``(params, pspecs)`` — a param tree and a mirrored PartitionSpec tree.
+
+Sharding convention (DESIGN.md §7): 'model' is the TP/EP axis; when
+``fsdp_axis`` is set (usually 'data'), the other big dimension of each
+weight is sharded over it (ZeRO-3-style 2-D sharding).  Stacked (scanned)
+layer params get a leading None axis in their spec.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def truncnorm(rng, shape, scale, dtype):
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def linear_init(rng, d_in, d_out, dtype, spec, bias=False, scale=None):
+    if scale is None:
+        scale = d_in ** -0.5
+    p = {"w": truncnorm(rng, (d_in, d_out), scale, dtype)}
+    s = {"w": spec}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = P(spec[-1]) if spec != P() else P()
+    return p, s
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}, {"scale": P(None)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def embed_init(rng, vocab, d, dtype, fsdp_axis):
+    p = {"table": truncnorm(rng, (vocab, d), 1.0, dtype)}
+    return p, {"table": P("model", fsdp_axis)}
+
+
+def embed_lookup(p, tokens, scale=False):
+    t = p["table"]
+    y = jnp.take(t, tokens, axis=0)
+    if scale:
+        y = y * jnp.asarray(t.shape[1] ** 0.5, y.dtype)
+    return y
+
+
+def embed_logits(p, x, softcap=None):
+    logits = jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# --- rotary embeddings ------------------------------------------------------
+def rope_angles(positions, hd, fraction=1.0, theta=10_000.0):
+    """cos/sin tables [..., hd_rot/2] for the rotated fraction of hd."""
+    rot = int(hd * fraction) // 2 * 2
+    freqs = theta ** (-jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, fraction=1.0):
+    """x [..., S, H, hd]; cos/sin [..., S, rot/2] broadcast over heads."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1) if rot < hd else yr
+
+
+# --- MLP ---------------------------------------------------------------------
+def mlp_init(rng, d, ff, dtype, fsdp_axis, act="silu"):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    p, s = {}, {}
+    p["gate"], s["gate"] = linear_init(r1, d, ff, dtype, P(fsdp_axis, "model"))
+    p["up"], s["up"] = linear_init(r2, d, ff, dtype, P(fsdp_axis, "model"))
+    p["down"], s["down"] = linear_init(r3, ff, d, dtype, P("model", fsdp_axis))
+    return p, s
+
+
+def mlp(p, x, act="silu"):
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    return linear(p["down"], a(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+def stack_inits(rng, n, init_fn):
+    """vmap an init over a leading layer axis; specs get a leading None."""
+    rngs = jax.random.split(rng, n)
+    p0, s0 = init_fn(rngs[0])
+    stacked = jax.vmap(lambda r: init_fn(r)[0])(rngs)
+    specs = jax.tree.map(lambda sp: P(None, *sp), s0,
+                         is_leaf=lambda v: isinstance(v, P))
+    return stacked, specs

@@ -1,0 +1,125 @@
+"""Mamba2 (SSD) block on the shared chunked scalar-decay recurrence.
+
+Mapping onto ssm_common.chunked_scan (per head h, state [N, P]):
+    decay   f_t = exp(dt_t * A_h)          (A_h = -exp(A_log_h) < 0)
+    k_t     = B_t * dt_t                    (dt folded into the input)
+    v_t     = x_t (head slice)              q_t = C_t
+    y_t     = q_t @ S_t + D_h * v_t
+B/C are shared across heads (single group), x/B/C pass through a causal
+depthwise conv (kernel 4) + silu, output is gated-RMSNormed and projected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers, ssm_common
+from repro.models.layers import linear, linear_init, rmsnorm
+
+
+def _dims(cfg):
+    di = cfg.d_model * cfg.ssm_expand
+    h = cfg.ssm_heads or max(1, di // 64)
+    return di, h, di // h, cfg.ssm_state
+
+
+def init(rng, cfg, fsdp_axis):
+    d = cfg.d_model
+    di, h, pdim, n = _dims(cfg)
+    conv_dim = di + 2 * n
+    r = jax.random.split(rng, 4)
+    dtype = layers.dt(cfg)
+    p, s = {}, {}
+    p["ln"], s["ln"] = layers.rmsnorm_init(d, dtype)
+    p["in_proj"], s["in_proj"] = linear_init(
+        r[0], d, 2 * di + 2 * n + h, dtype, P(fsdp_axis, "model"))
+    p["conv_w"] = layers.truncnorm(r[1], (cfg.ssm_conv, conv_dim),
+                                   cfg.ssm_conv ** -0.5, dtype)
+    s["conv_w"] = P(None, "model")
+    p["conv_b"] = jnp.zeros((conv_dim,), dtype)
+    s["conv_b"] = P("model")
+    p["a_log"] = jnp.zeros((h,), jnp.float32)
+    s["a_log"] = P("model")
+    p["d_skip"] = jnp.ones((h,), jnp.float32)
+    s["d_skip"] = P("model")
+    p["dt_bias"] = jnp.zeros((h,), jnp.float32)
+    s["dt_bias"] = P("model")
+    p["hn"], s["hn"] = layers.rmsnorm_init(di, dtype)
+    p["out_proj"], s["out_proj"] = linear_init(r[2], di, d, dtype,
+                                               P("model", fsdp_axis))
+    return p, s
+
+
+def _split(p, xn, cfg):
+    di, h, pdim, n = _dims(cfg)
+    z, xbc, dt = jnp.split(linear(p["in_proj"], xn), [di, 2 * di + 2 * n], -1)
+    return z, xbc, dt
+
+
+def _ssm_inputs(p, xbc, dt, cfg):
+    """xbc [B,S,di+2N] (post conv+silu); dt [B,S,H] -> q,k,v,log_f."""
+    di, h, pdim, n = _dims(cfg)
+    b, sq = xbc.shape[:2]
+    xc, bmat, cmat = jnp.split(xbc, [di, di + n], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [B,S,H]
+    a = -jnp.exp(p["a_log"])
+    log_f = dt * a                                                   # <= 0
+    v = xc.reshape(b, sq, h, pdim)
+    k = bmat[:, :, None, :] * dt[..., None].astype(bmat.dtype)       # [B,S,H,N]
+    q = jnp.broadcast_to(cmat[:, :, None, :], k.shape)
+    return q, k, v, log_f
+
+
+def _out(p, x, y, v, z, cfg):
+    di, h, pdim, n = _dims(cfg)
+    b, sq = z.shape[:2]
+    y = y + p["d_skip"][None, None, :, None] * v.astype(jnp.float32)
+    y = y.reshape(b, sq, di).astype(x.dtype)
+    y = rmsnorm(p["hn"], y, cfg.norm_eps) * jax.nn.silu(z)
+    return x + linear(p["out_proj"], y)
+
+
+def apply(p, x, cfg, state=None):
+    """state: None (train) or (conv_state [B,K-1,conv], ScanState) for
+    prefill — the returned state continues with decode()."""
+    xn = rmsnorm(p["ln"], x, cfg.norm_eps)
+    z, xbc_pre, dt = _split(p, xn, cfg)
+    xbc = jax.nn.silu(
+        ssm_common.causal_conv1d(xbc_pre, p["conv_w"], p["conv_b"]))
+    q, k, v, log_f = _ssm_inputs(p, xbc, dt, cfg)
+    ssm_state = state[1] if state is not None else None
+    y, _, new_ssm = ssm_common.chunked_scan(q, k, v, log_f,
+                                            chunk=cfg.ssm_chunk,
+                                            state=ssm_state)
+    out = _out(p, x, y, v, z, cfg)
+    if state is None:
+        return out, None
+    # conv state = last K-1 pre-conv inputs (prefill -> decode handoff)
+    k1 = cfg.ssm_conv - 1
+    padded = jnp.pad(xbc_pre, ((0, 0), (k1, 0), (0, 0)))
+    return out, (padded[:, -k1:], new_ssm)
+
+
+def decode(p, x, cfg, state):
+    """x [B,1,D]; state = (conv_state, ScanState)."""
+    conv_state, ssm_state = state
+    xn = rmsnorm(p["ln"], x, cfg.norm_eps)
+    z, xbc, dt = _split(p, xn, cfg)
+    y_c, new_conv = ssm_common.conv_decode_step(
+        xbc[:, 0], conv_state, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(y_c)[:, None]
+    q, k, v, log_f = _ssm_inputs(p, xbc, dt, cfg)
+    y, _, new_ssm = ssm_common.decode_step(
+        q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], ssm_state)
+    out = _out(p, x, y[:, None], v, z, cfg)
+    return out, (new_conv, new_ssm)
+
+
+def init_state(cfg, batch, dtype=None):
+    di, h, pdim, n = _dims(cfg)
+    conv_dim = di + 2 * n
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype or layers.dt(cfg)),
+        ssm_common.init_state(batch, h, n, pdim),
+    )

@@ -1,0 +1,73 @@
+"""Unified model registry: family -> (init, apply, init_caches)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.models import encdec, transformer, xlstm, zamba
+
+
+class Model(NamedTuple):
+    cfg: Any
+    init: Callable            # rng -> (params, pspecs)
+    apply: Callable            # (params, batch, mode=..., caches=...) -> ...
+    init_caches: Callable      # (batch, max_len, src_len=None) -> caches
+
+
+def build(cfg) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg,
+            lambda rng: transformer.init(rng, cfg),
+            lambda p, b, **kw: transformer.apply(p, b, cfg, **kw),
+            lambda batch, max_len, src_len=None:
+                transformer.init_caches(cfg, batch, max_len),
+        )
+    if fam == "xlstm":
+        return Model(
+            cfg,
+            lambda rng: xlstm.init(rng, cfg),
+            lambda p, b, **kw: xlstm.apply(p, b, cfg, **kw),
+            lambda batch, max_len=None, src_len=None:
+                xlstm.init_caches(cfg, batch),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg,
+            lambda rng: zamba.init(rng, cfg),
+            lambda p, b, **kw: zamba.apply(p, b, cfg, **kw),
+            lambda batch, max_len, src_len=None:
+                zamba.init_caches(cfg, batch, max_len),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg,
+            lambda rng: encdec.init(rng, cfg),
+            lambda p, b, **kw: encdec.apply(p, b, cfg, **kw),
+            lambda batch, max_len, src_len=None:
+                encdec.init_caches(cfg, batch, max_len, src_len or max_len),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def param_count(params) -> int:
+    import jax
+
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def abstract_init(mdl: Model):
+    """(param ShapeDtypeStructs, pspecs) without allocating anything.
+    eval_shape traces init; the spec tree (plain Python) rides a side
+    channel since eval_shape outputs must be arrays."""
+    import jax
+
+    holder = {}
+
+    def f():
+        params, specs = mdl.init(jax.random.PRNGKey(0))
+        holder["specs"] = specs
+        return params
+
+    params_struct = jax.eval_shape(f)
+    return params_struct, holder["specs"]

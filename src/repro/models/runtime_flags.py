@@ -1,0 +1,12 @@
+"""Global execution flags for analysis passes.
+
+UNROLL_SCANS: when True, every lax.scan in the model zoo fully unrolls.
+Used by the cost-model validation tests — XLA's cost analysis counts a
+while-loop body ONCE regardless of trip count, so only unrolled HLO gives
+ground-truth FLOPs.  Never enabled at real scale (HLO would explode).
+"""
+UNROLL_SCANS = False
+
+
+def scan_unroll():
+    return True if UNROLL_SCANS else 1

@@ -1,0 +1,114 @@
+"""Chunked scalar-decay linear recurrence — shared by mLSTM and Mamba2 SSD.
+
+Recurrence (per batch, head):   C_t = f_t * C_{t-1} + k_t v_t^T
+                                n_t = f_t * n_{t-1} + k_t
+                                y_t = q_t @ C_t     (+ optional normalizer)
+
+with data-dependent scalar decay f_t in (0, 1] (log_f <= 0, so every
+exponent below is <= 0 — no stabilizer state needed; DESIGN.md §9 notes
+this bounded-gate deviation from exponential-gate xLSTM).
+
+Chunked evaluation (chunk c): intra-chunk weights W(t,s) = exp(A_t - A_s)
+for s <= t with A = cumsum(log_f), inter-chunk contribution exp(A_t) * C_in,
+carry C_out = sum_s exp(A_end - A_s) k_s v_s^T + exp(A_end) * C_in — one
+lax.scan over S/c chunks, O(S*c) work instead of O(S^2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from repro.models import runtime_flags
+
+
+class ScanState(NamedTuple):
+    C: jax.Array   # [B, H, dk, dv]
+    n: jax.Array   # [B, H, dk]
+
+
+def init_state(b, h, dk, dv, dtype=jnp.float32):
+    return ScanState(jnp.zeros((b, h, dk, dv), dtype),
+                     jnp.zeros((b, h, dk), dtype))
+
+
+def chunked_scan(q, k, v, log_f, *, chunk: int = 64,
+                 state: ScanState | None = None, normalize: bool = False):
+    """q,k [B,S,H,dk]; v [B,S,H,dv]; log_f [B,S,H] (<=0).
+
+    Returns (y [B,S,H,dv], qn [B,S,H] or None, final ScanState).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    if s % c:
+        c = s
+    nc = s // c
+    if state is None:
+        state = init_state(b, h, dk, dv)
+
+    qc = q.reshape(b, nc, c, h, dk).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kc = k.reshape(b, nc, c, h, dk).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vc = v.reshape(b, nc, c, h, dv).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    fc = log_f.reshape(b, nc, c, h).transpose(1, 0, 3, 2).astype(jnp.float32)
+    # per chunk: q/k/v [B,H,c,d*], f [B,H,c]
+
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(st, xs):
+        qi, ki, vi, fi = xs
+        A = jnp.cumsum(fi, axis=-1)                     # [B,H,c]
+        w = jnp.exp(A[..., :, None] - A[..., None, :])  # [B,H,c,c] (<=1 on tril)
+        w = jnp.where(tri, w, 0.0)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qi, ki) * w
+        y = jnp.einsum("bhts,bhsv->bhtv", scores, vi)
+        decay_in = jnp.exp(A)[..., None]                # [B,H,c,1]
+        y += jnp.einsum("bhtd,bhdv->bhtv", qi * decay_in, st.C)
+        qn = None
+        if normalize:
+            qn = scores.sum(-1) + jnp.einsum("bhtd,bhd->bht", qi * decay_in,
+                                             st.n)
+        w_end = jnp.exp(A[..., -1:] - A)                # [B,H,c]
+        C_new = jnp.einsum("bhs,bhsd,bhsv->bhdv", w_end, ki, vi) + \
+            st.C * jnp.exp(A[..., -1])[..., None, None]
+        n_new = jnp.einsum("bhs,bhsd->bhd", w_end, ki) + \
+            st.n * jnp.exp(A[..., -1])[..., None]
+        return ScanState(C_new, n_new), (y, qn if normalize else jnp.zeros(
+            (b, h, c), jnp.float32))
+
+    final, (ys, qns) = jax.lax.scan(step, state, (qc, kc, vc, fc),
+                                    unroll=runtime_flags.scan_unroll())
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dv)
+    qn = qns.transpose(1, 0, 3, 2).reshape(b, s, h) if normalize else None
+    return y, qn, final
+
+
+def decode_step(q, k, v, log_f, state: ScanState, normalize: bool = False):
+    """One-token update. q,k [B,H,dk]; v [B,H,dv]; log_f [B,H]."""
+    f = jnp.exp(log_f.astype(jnp.float32))[..., None]
+    C = state.C * f[..., None] + jnp.einsum(
+        "bhd,bhv->bhdv", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = state.n * f + k.astype(jnp.float32)
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), C)
+    qn = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n) if normalize else None
+    return y, qn, ScanState(C, n)
+
+
+def causal_conv1d(x, w, b=None):
+    """Depthwise causal conv: x [B,S,C], w [K,C] -> [B,S,C] (shift-and-add)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, j:j + x.shape[1]] * w[j][None, None] for j in range(k))
+    if b is not None:
+        y = y + b[None, None]
+    return y
+
+
+def conv_decode_step(x_t, conv_state, w, b=None):
+    """x_t [B,C]; conv_state [B,K-1,C] (previous inputs, oldest first)."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        y = y + b[None]
+    return y, window[:, 1:]

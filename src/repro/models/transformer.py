@@ -1,0 +1,191 @@
+"""Decoder-only transformer LM: dense, MoE and VLM families.
+
+Layers are stacked per *pattern position* and iterated with lax.scan, so
+HLO size is O(pattern length), not O(n_layers).  The pattern unit captures
+heterogeneous stacks statically:
+
+  dense uniform        -> ('dense',)
+  gemma2 local/global  -> ('local', 'global')
+  MoE every layer      -> ('moe',)
+  MoE interleave k     -> ('dense', ..., 'moe')
+
+pixtral (family 'vlm') is this same decoder with a projected patch-embed
+prefix (the ViT frontend is a stub per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain, fsdp_axis_for
+from repro.models import attention, layers, moe
+from repro.models.layers import rmsnorm
+from repro.models import runtime_flags
+
+
+def pattern_of(cfg) -> tuple[str, ...]:
+    if cfg.local_global:
+        return ("local", "global")
+    if cfg.n_experts:
+        if cfg.moe_interleave > 1:
+            return ("dense",) * (cfg.moe_interleave - 1) + ("moe",)
+        return ("moe",)
+    return ("dense",)
+
+
+def layer_init(rng, cfg, kind, fsdp_axis):
+    r = jax.random.split(rng, 4)
+    dtype = layers.dt(cfg)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    p["attn"], s["attn"] = attention.init(r[0], cfg, fsdp_axis)
+    p["ln2"], s["ln2"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    if kind == "moe":
+        p["ffn"], s["ffn"] = moe.init(r[1], cfg, fsdp_axis)
+    else:
+        p["ffn"], s["ffn"] = layers.mlp_init(r[1], cfg.d_model, cfg.d_ff,
+                                             dtype, fsdp_axis, cfg.mlp_act)
+    if cfg.post_norms:
+        p["ln1b"], s["ln1b"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        p["ln2b"], s["ln2b"] = layers.rmsnorm_init(cfg.d_model, dtype)
+    return p, s
+
+
+def layer_apply(p, x, cfg, kind, *, positions, cache=None, impl=None):
+    window = cfg.sliding_window if kind == "local" else None
+    h, new_cache = attention.apply(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+        positions=positions, window=window, cache=cache, impl=impl)
+    if cfg.post_norms:
+        h = rmsnorm(p["ln1b"], h, cfg.norm_eps)
+    x = x + h
+    # sp_residual: 'seq_res' -> 'model' shards the residual stream on the
+    # sequence dim between blocks (Megatron-SP): the per-block all-reduce
+    # becomes reduce-scatter + all-gather at half the volume and the norms
+    # run on 1/TP of the tokens.
+    x = constrain(x, ("batch", "seq_res", None))
+    f = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "moe":
+        f, aux = moe.apply(p["ffn"], f, cfg)
+    else:
+        f = layers.mlp(p["ffn"], f, cfg.mlp_act)
+    if cfg.post_norms:
+        f = rmsnorm(p["ln2b"], f, cfg.norm_eps)
+    x = x + f
+    return constrain(x, ("batch", "seq_res", None)), new_cache, aux
+
+
+def init(rng, cfg):
+    fsdp_axis = fsdp_axis_for(cfg)
+    pattern = pattern_of(cfg)
+    assert cfg.n_layers % len(pattern) == 0, (cfg.n_layers, pattern)
+    n_rep = cfg.n_layers // len(pattern)
+    r = jax.random.split(rng, len(pattern) + 3)
+    p, s = {}, {}
+    p["embed"], s["embed"] = layers.embed_init(
+        r[0], cfg.vocab_size, cfg.d_model, layers.dt(cfg), fsdp_axis)
+    for i, kind in enumerate(pattern):
+        p[f"blk{i}"], s[f"blk{i}"] = layers.stack_inits(
+            r[1 + i], n_rep,
+            functools.partial(layer_init, cfg=cfg, kind=kind,
+                              fsdp_axis=fsdp_axis))
+    p["ln_f"], s["ln_f"] = layers.rmsnorm_init(cfg.d_model, layers.dt(cfg))
+    if not cfg.tie_embeddings:
+        p["head"], s["head"] = layers.linear_init(
+            r[-1], cfg.d_model, cfg.vocab_size, layers.dt(cfg),
+            jax.sharding.PartitionSpec(fsdp_axis, "model"))
+    if cfg.family == "vlm":
+        p["patch_proj"], s["patch_proj"] = layers.linear_init(
+            r[-2], cfg.frontend_dim, cfg.d_model, layers.dt(cfg),
+            jax.sharding.PartitionSpec(None, fsdp_axis))
+    return p, s
+
+
+def _embed_inputs(p, batch, cfg):
+    x = layers.embed_lookup(p["embed"], batch["tokens"], cfg.embed_scale)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        patches = layers.linear(p["patch_proj"],
+                                batch["patch_embeds"].astype(x.dtype))
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def _logits(p, x, cfg):
+    x = rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return layers.embed_logits(p["embed"], x, cfg.final_softcap)
+    logits = layers.linear(p["head"], x)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def _scan_layers(p, x, cfg, *, positions, caches=None, impl=None):
+    pattern = pattern_of(cfg)
+    n_rep = cfg.n_layers // len(pattern)
+    stacked = tuple(p[f"blk{i}"] for i in range(len(pattern)))
+
+    def body(carry, xs):
+        x, aux = carry
+        lp = xs[: len(pattern)]
+        lc = xs[len(pattern):] if caches is not None else [None] * len(pattern)
+        new_cs = []
+        for i, kind in enumerate(pattern):
+            x, nc, a = layer_apply(lp[i], x, cfg, kind, positions=positions,
+                                   cache=lc[i], impl=impl)
+            aux = aux + a
+            new_cs.append(nc)
+        out = tuple(new_cs) if caches is not None else None
+        return (x, aux), out
+
+    if cfg.remat != "none" and caches is None:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = stacked + tuple(caches) if caches is not None else stacked
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                        xs, unroll=runtime_flags.scan_unroll())
+    return x, aux, new_caches
+
+
+def apply(p, batch, cfg, *, mode="train", caches=None):
+    """mode 'train': full-sequence (logits, aux).
+    mode 'prefill': caches required (empty) -> (logits, new_caches).
+    mode 'decode': batch['tokens'] is [B, 1], caches -> (logits, new_caches).
+    """
+    x = _embed_inputs(p, batch, cfg)
+    b, s = x.shape[:2]
+    if mode == "decode":
+        pos = caches[0]["pos"][0]
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        x, _, new_caches = _scan_layers(p, x, cfg, positions=positions,
+                                        caches=caches)
+        return _logits(p, x, cfg), new_caches
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = constrain(x, ("batch", None, None))
+    if mode == "prefill":
+        x, _, new_caches = _scan_layers(p, x, cfg, positions=positions,
+                                        caches=caches)
+        # serving prefill only needs next-token logits (saves a [B,S,V])
+        return _logits(p, x[:, -1:], cfg), new_caches
+    x, aux, _ = _scan_layers(p, x, cfg, positions=positions)
+    return _logits(p, x, cfg), aux
+
+
+def init_caches(cfg, batch, max_len, dtype=None):
+    """Per pattern position: stacked [n_rep, ...] cache trees (scan xs)."""
+    pattern = pattern_of(cfg)
+    n_rep = cfg.n_layers // len(pattern)
+    caches = []
+    for _ in pattern:
+        one = attention.init_cache(cfg, batch, max_len, dtype)
+        caches.append({
+            "k": jnp.zeros((n_rep,) + one["k"].shape, one["k"].dtype),
+            "v": jnp.zeros((n_rep,) + one["v"].shape, one["v"].dtype),
+            "pos": jnp.zeros((n_rep,), jnp.int32),
+        })
+    return tuple(caches)  # tuple: matches the scan's output structure

@@ -1,0 +1,162 @@
+"""Zamba2: Mamba2 backbone + weight-SHARED attention blocks.
+
+Per the published architecture: every ``shared_attn_every`` Mamba2 layers,
+a shared transformer block runs on concat(x, x_embed0) at width 2*d_model
+(zamba2-2.7b: 32 heads x head_dim 160 = 5120 = 2*2560), followed by a
+projection back to d_model added to the residual.  ``n_shared_attn_blocks``
+(2) parameter sets alternate across invocations; each invocation keeps its
+OWN kv cache (weights are shared, states are not).  Per-invocation LoRA
+adapters of the original are omitted (DESIGN.md §9).
+
+Scan structure: groups of (shared_attn_every Mamba layers + 1 shared-attn
+invocation); Mamba params are stacked [n_groups, every, ...], shared-attn
+params indexed by invocation parity via dynamic slicing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain, fsdp_axis_for
+from repro.models import attention, layers, mamba2
+from repro.models.layers import linear, linear_init, rmsnorm
+from repro.models import runtime_flags
+
+
+def _shared_cfg(cfg):
+    d2 = 2 * cfg.d_model
+    return cfg.replace(d_model=d2, head_dim=d2 // cfg.n_heads,
+                       attn_softcap=None, sliding_window=None)
+
+
+def _groups(cfg):
+    every = cfg.shared_attn_every or cfg.n_layers
+    assert cfg.n_layers % every == 0
+    return cfg.n_layers // every, every
+
+
+def shared_block_init(rng, cfg, fsdp_axis):
+    d = cfg.d_model
+    scfg = _shared_cfg(cfg)
+    r = jax.random.split(rng, 4)
+    dtype = layers.dt(cfg)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = layers.rmsnorm_init(2 * d, dtype)
+    p["attn"], s["attn"] = attention.init(r[0], scfg, fsdp_axis)
+    p["ln2"], s["ln2"] = layers.rmsnorm_init(2 * d, dtype)
+    p["mlp"], s["mlp"] = layers.mlp_init(r[1], 2 * d, cfg.d_ff, dtype,
+                                         fsdp_axis, cfg.mlp_act)
+    p["down"], s["down"] = linear_init(r[2], 2 * d, d, dtype,
+                                       P("model", fsdp_axis))
+    return p, s
+
+
+def shared_block_apply(p, x, x0, cfg, *, positions, cache=None):
+    scfg = _shared_cfg(cfg)
+    h = jnp.concatenate([x, x0], axis=-1)
+    a, new_cache = attention.apply(p["attn"], rmsnorm(p["ln1"], h,
+                                                      cfg.norm_eps),
+                                   scfg, positions=positions, cache=cache)
+    h = h + a
+    h = h + layers.mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps),
+                       cfg.mlp_act)
+    return x + linear(p["down"], h), new_cache
+
+
+def init(rng, cfg):
+    fsdp_axis = fsdp_axis_for(cfg)
+    n_groups, every = _groups(cfg)
+    r = jax.random.split(rng, 4 + cfg.n_shared_attn_blocks)
+    p, s = {}, {}
+    p["embed"], s["embed"] = layers.embed_init(
+        r[0], cfg.vocab_size, cfg.d_model, layers.dt(cfg), fsdp_axis)
+
+    def group_init(rg):
+        return layers.stack_inits(
+            rg, every, functools.partial(mamba2.init, cfg=cfg,
+                                         fsdp_axis=fsdp_axis))
+
+    p["mamba"], s["mamba"] = layers.stack_inits(r[1], n_groups, group_init)
+    shared_ps, shared_ss = [], None
+    for i in range(cfg.n_shared_attn_blocks):
+        sp, ss = shared_block_init(r[2 + i], cfg, fsdp_axis)
+        shared_ps.append(sp)
+        shared_ss = ss
+    p["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs), *shared_ps)
+    s["shared"] = jax.tree.map(lambda sp: P(None, *sp), shared_ss,
+                               is_leaf=lambda v: isinstance(v, P))
+    p["ln_f"], s["ln_f"] = layers.rmsnorm_init(cfg.d_model, layers.dt(cfg))
+    return p, s
+
+
+def init_caches(cfg, batch, max_len, dtype=None):
+    n_groups, every = _groups(cfg)
+    scfg = _shared_cfg(cfg)
+    mamba_states = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_groups, every) + a.shape).copy(),
+        mamba2.init_state(cfg, batch, dtype))
+    attn_cache = attention.init_cache(scfg, batch, max_len, dtype)
+    attn_caches = {
+        "k": jnp.zeros((n_groups,) + attn_cache["k"].shape, attn_cache["k"].dtype),
+        "v": jnp.zeros((n_groups,) + attn_cache["v"].shape, attn_cache["v"].dtype),
+        "pos": jnp.zeros((n_groups,), jnp.int32),
+    }
+    return {"mamba": mamba_states, "attn": attn_caches}
+
+
+def apply(p, batch, cfg, *, mode="train", caches=None):
+    x = layers.embed_lookup(p["embed"], batch["tokens"], cfg.embed_scale)
+    x = constrain(x, ("batch", None, None))
+    x0 = x
+    b, sq = x.shape[:2]
+    n_groups, every = _groups(cfg)
+    with_cache = caches is not None
+    decode = mode == "decode"
+    if decode:
+        pos0 = caches["attn"]["pos"][0]
+        positions = jnp.full((b, 1), pos0, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (b, sq))
+
+    def body(carry, xs):
+        x, g = carry
+        if with_cache:
+            mp, ms, ac = xs
+        else:
+            mp, ms, ac = xs[0], None, None
+        new_ms = []
+        for i in range(every):
+            lp = jax.tree.map(lambda a: a[i], mp)
+            st = jax.tree.map(lambda a: a[i], ms) if with_cache else None
+            if decode:
+                x, ns = mamba2.decode(lp, x, cfg, st)
+            else:
+                x, ns = mamba2.apply(lp, x, cfg, st)
+            if with_cache:
+                new_ms.append(ns)
+        sp = jax.tree.map(lambda a: a[g % cfg.n_shared_attn_blocks],
+                          p["shared"])
+        x, new_ac = shared_block_apply(sp, x, x0, cfg, positions=positions,
+                                       cache=ac)
+        out = None
+        if with_cache:
+            new_ms = jax.tree.map(lambda *ys: jnp.stack(ys), *new_ms)
+            out = (new_ms, new_ac)
+        return (x, g + 1), out
+
+    if cfg.remat != "none" and mode == "train":
+        body = jax.checkpoint(body)
+    xs = (p["mamba"], caches["mamba"], caches["attn"]) if with_cache \
+        else (p["mamba"],)
+    (x, _), outs = jax.lax.scan(body, (x, jnp.zeros((), jnp.int32)), xs,
+                                unroll=runtime_flags.scan_unroll())
+    if mode == "prefill":
+        x = x[:, -1:]
+    logits = layers.embed_logits(
+        p["embed"], rmsnorm(p["ln_f"], x, cfg.norm_eps), cfg.final_softcap)
+    if with_cache:
+        return logits, {"mamba": outs[0], "attn": outs[1]}
+    return logits, jnp.zeros((), jnp.float32)

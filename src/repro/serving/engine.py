@@ -1,0 +1,105 @@
+"""Batched serving: jitted prefill + decode steps, wave scheduler.
+
+Iteration-level continuous batching ("waves"): requests queue up, are
+grouped into fixed-size padded batches, prefilled together, and decoded
+until every slot emits EOS or hits its token budget; finished slots are
+masked (their tokens frozen) so stragglers don't stall correctness, and
+the next wave refills all slots.  Slot-level refill (per-sequence
+admission) is a scheduler extension documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 32
+
+
+class ServeEngine:
+    def __init__(self, mdl, params, *, batch_size: int, max_len: int,
+                 eos_id: int = 2, temperature: float = 0.0):
+        self.mdl = mdl
+        self.params = params
+        self.b = batch_size
+        self.max_len = max_len
+        self.eos = eos_id
+        self.temperature = temperature
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+
+        def prefill(params, tokens, caches):
+            logits, caches = mdl.apply(params, {"tokens": tokens},
+                                       mode="prefill", caches=caches)
+            return logits[:, -1], caches
+
+        def decode(params, tokens, caches, rng):
+            logits, caches = mdl.apply(params, {"tokens": tokens},
+                                       mode="decode", caches=caches)
+            nxt = sample(logits[:, 0], rng, temperature)
+            return nxt, caches
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode)
+
+    def submit(self, req: Request):
+        self.queue.put(req)
+
+    def _next_wave(self) -> list[Request]:
+        """Length-bucketed admission: a wave shares one prompt length, so
+        no padding tokens ever enter attention (masks stay exact)."""
+        wave: list[Request] = []
+        deferred: list[Request] = []
+        while len(wave) < self.b and not self.queue.empty():
+            r = self.queue.get()
+            if not wave or len(r.prompt) == len(wave[0].prompt):
+                wave.append(r)
+            else:
+                deferred.append(r)
+        for r in deferred:
+            self.queue.put(r)
+        return wave
+
+    def run(self, rng=None) -> dict[int, np.ndarray]:
+        """Drain the queue; returns rid -> generated tokens."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        results: dict[int, np.ndarray] = {}
+        while not self.queue.empty():
+            wave = self._next_wave()
+            plen = len(wave[0].prompt)
+            tokens = np.zeros((self.b, plen), np.int32)
+            for i, r in enumerate(wave):
+                tokens[i] = r.prompt
+            budget = max(r.max_new_tokens for r in wave)
+
+            caches = self.mdl.init_caches(self.b, self.max_len)
+            last, caches = self._prefill(self.params, jnp.asarray(tokens),
+                                         caches)
+            nxt = sample(last, rng, self.temperature)
+            out = [nxt]
+            done = np.zeros(self.b, bool)
+            for _ in range(budget - 1):
+                rng, sub = jax.random.split(rng)
+                nxt, caches = self._decode(self.params, nxt[:, None], caches,
+                                           sub)
+                out.append(nxt)
+                done |= np.asarray(nxt) == self.eos
+                if done[: len(wave)].all():
+                    break
+            gen = np.stack([np.asarray(t) for t in out], 1)  # [B, T]
+            for i, r in enumerate(wave):
+                toks = gen[i]
+                stop = np.nonzero(toks == self.eos)[0]
+                if len(stop):
+                    toks = toks[: stop[0] + 1]
+                results[r.rid] = toks[: r.max_new_tokens]
+        return results

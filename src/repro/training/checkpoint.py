@@ -1,0 +1,89 @@
+"""Checkpointing: atomic, resumable, async-capable (no orbax in container).
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, written to a tmp dir
+and atomically renamed — a crashed writer never corrupts the latest
+checkpoint, which is what restart-after-failure relies on.  ``save_async``
+snapshots to host then writes on a background thread (training continues).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, str(treedef)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    """Blocking atomic save; returns the checkpoint path."""
+    leaves, treedef = _flatten(tree)
+    hosted = [np.asarray(x) for x in leaves]
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"a{i}": a for i, a in enumerate(hosted)})
+    manifest = {"step": step, "n_leaves": len(hosted),
+                "treedef": treedef, "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+_async_thread: threading.Thread | None = None
+
+
+def save_async(ckpt_dir: str, step: int, tree, extra: dict | None = None):
+    """Snapshot to host now, write in the background."""
+    global _async_thread
+    wait()
+    leaves, treedef = _flatten(tree)
+    hosted = [np.asarray(x) for x in leaves]  # device->host happens here
+    unflat = jax.tree_util.tree_structure(tree)
+
+    def _write():
+        save(ckpt_dir, step,
+             jax.tree_util.tree_unflatten(unflat, hosted), extra)
+
+    _async_thread = threading.Thread(target=_write, daemon=True)
+    _async_thread.start()
+
+
+def wait():
+    global _async_thread
+    if _async_thread is not None:
+        _async_thread.join()
+        _async_thread = None
+
+
+def latest(ckpt_dir: str) -> str | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return os.path.join(ckpt_dir, steps[-1]) if steps else None
+
+
+def restore(path: str, tree_like):
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    z = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [z[f"a{i}"] for i in range(manifest["n_leaves"])]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    ref_leaves = jax.tree_util.tree_leaves(tree_like)
+    assert len(ref_leaves) == len(leaves), "checkpoint/model tree mismatch"
+    cast = [np.asarray(a, dtype=r.dtype) for a, r in zip(leaves, ref_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, cast), manifest

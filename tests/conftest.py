@@ -1,0 +1,56 @@
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def small_cohort():
+    from repro.data import dbmart, synthea
+
+    pats, dates, phx, truth = synthea.generate_cohort(
+        n_patients=48, avg_events=24, seed=5)
+    return dbmart.from_rows(pats, dates, phx), truth
+
+
+def brute_force_pairs(db):
+    """Independent O(n^2) oracle: set of (patient, start, end, duration)."""
+    out = []
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        for i in range(n):
+            for j in range(i + 1, n):
+                out.append((p, int(db.phenx[p, i]), int(db.phenx[p, j]),
+                            int(db.date[p, j]) - int(db.date[p, i])))
+    return out
+
+
+@pytest.fixture
+def brute_force():
+    return brute_force_pairs
+
+
+def random_dbmart(rng: np.random.Generator, n_patients=None, max_events=None,
+                  n_codes=None, date_range=400):
+    """Random numeric dbmart for property tests."""
+    from repro.data.dbmart import DBMart
+
+    P = n_patients or int(rng.integers(1, 12))
+    E = max_events or int(rng.integers(2, 24))
+    V = n_codes or int(rng.integers(2, 30))
+    nevents = rng.integers(0, E + 1, P).astype(np.int32)
+    e_pad = -(-max(int(nevents.max(initial=1)), 1) // 8) * 8
+    phenx = rng.integers(0, V, (P, e_pad)).astype(np.int32)
+    date = np.sort(rng.integers(0, date_range, (P, e_pad)).astype(np.int32), axis=1)
+    for p in range(P):
+        n = int(nevents[p])
+        if n < e_pad:
+            date[p, n:] = date[p, n - 1] if n else 0
+    return DBMart(phenx, date, nevents, None)

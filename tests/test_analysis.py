@@ -1,0 +1,109 @@
+"""Roofline machinery: HLO collective parser (synthetic text), terms math,
+tokenizer roundtrips, sampling properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import roofline as rl
+from repro.data import tokenize
+from repro.data.dbmart import from_rows
+from repro.serving.sampling import sample
+
+SYNTH_HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128]{0})) -> (s32[], f32[128]{0}) {
+  %ar.1 = f32[128]{0} all-reduce(%x), replica_groups=[4,2]<=[8]
+  ROOT %t = (s32[], f32[128]{0}) tuple(%i, %ar.1)
+}
+
+ENTRY %main (a: f32[256]) -> f32[256] {
+  %w = (s32[], f32[128]{0}) while(%init), condition=%c, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %ag = f32[256]{0} all-gather(%shard), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(%big), replica_groups=[2,4]<=[8]
+  %cp = f32[256]{0} collective-permute(%a), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_collective_parser_trip_scaling():
+    got = rl.collective_bytes(SYNTH_HLO)
+    assert got["all-reduce"] == 128 * 4 * 10          # x trip count
+    assert got["all-gather"] == 256 * 4 // 4          # operand = out/group
+    assert got["reduce-scatter"] == 64 * 4 * 4        # operand = out*group
+    assert got["collective-permute"] == 256 * 4
+
+
+def test_collective_parser_nested_loops():
+    nested = """
+%inner (p: f32[8]) -> f32[8] {
+  %ar = f32[8]{0} all-reduce(%x), replica_groups=[1,8]<=[8]
+}
+%outer (p: f32[8]) -> f32[8] {
+  %w2 = f32[8]{0} while(%i), condition=%c2, body=%inner, backend_config={"known_trip_count":{"n":"5"}}
+}
+ENTRY %main () -> f32[8] {
+  %w1 = f32[8]{0} while(%i), condition=%c1, body=%outer, backend_config={"known_trip_count":{"n":"3"}}
+}
+"""
+    got = rl.collective_bytes(nested)
+    assert got["all-reduce"] == 8 * 4 * 5 * 3         # product up the chain
+
+
+def test_shape_bytes():
+    assert rl.shape_bytes("bf16", "2,3,4") == 48
+    assert rl.shape_bytes("f32", "") == 4
+    assert rl.shape_bytes("pred", "128") == 128
+
+
+def test_roofline_terms_and_dominant():
+    r = rl.Roofline(arch="a", shape="s", chips=256, hlo_flops=1e18,
+                    hlo_bytes=1e12, coll_bytes=1e15, coll_breakdown={},
+                    model_flops=5e17)
+    assert r.t_compute == pytest.approx(1e18 / (256 * rl.PEAK_FLOPS))
+    assert r.t_memory == pytest.approx(1e12 / (256 * rl.HBM_BW))
+    assert r.t_collective == pytest.approx(1e15 / (256 * rl.ICI_BW))
+    assert r.dominant == "collective"
+    assert 0 < r.roofline_fraction < 1
+    assert r.useful_ratio == pytest.approx(0.5)
+
+
+def test_tokenizer_roundtrip_and_gaps():
+    db = from_rows([0, 0, 0], [10, 10, 74], ["A", "B", "A"])
+    docs = tokenize.patient_documents(db)
+    assert len(docs) == 1
+    d = docs[0]
+    assert d[0] == tokenize.BOS and d[-1] == tokenize.EOS
+    # A, gap(0), B, gap(64), A
+    xs = [t - tokenize.PHENX_OFFSET for t in d[1::2]]
+    assert xs == [db.vocab.phenx_index["A"], db.vocab.phenx_index["B"],
+                  db.vocab.phenx_index["A"]]
+    gaps = [int(t) - 4 for t in d[2::2][:2]]
+    assert gaps == [int(tokenize.gap_bucket(0)), int(tokenize.gap_bucket(64))]
+
+
+def test_pack_corpus_shapes_and_mask():
+    db = from_rows([0, 1, 1], [1, 2, 3], ["X", "Y", "Z"])
+    c = tokenize.pack_corpus(db, seq_len=8)
+    assert c.tokens.shape[1] == 8
+    assert (c.loss_mask == (c.tokens != tokenize.PAD)).all()
+
+
+def test_sampling_greedy_and_topk():
+    logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
+    assert int(sample(logits)[0]) == 1
+    rng = jax.random.PRNGKey(0)
+    draws = {int(sample(logits, jax.random.fold_in(rng, i),
+                        temperature=1.0, top_k=2)[0]) for i in range(50)}
+    assert draws <= {1, 2}
+    assert 1 in draws
+
+
+def test_count_params_moe_active():
+    from repro.configs import get_config
+
+    cfg = get_config("deepseek-moe-16b")
+    total, active = rl.count_params(cfg)
+    assert 15e9 < total < 20e9          # ~16B as published
+    assert 2e9 < active < 4e9           # ~2.8B active as published

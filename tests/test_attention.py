@@ -1,0 +1,108 @@
+"""Attention substrate: blocked (flash-style) == direct softmax, RoPE
+properties, decode == full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import attention, layers
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       jnp.float32)
+
+
+def _direct(q, k, v, causal=True, window=None, softcap=None):
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = attention_ref(qt, kt, vt, causal=causal, window=window,
+                      softcap=softcap)
+    return jnp.swapaxes(o, 1, 2)
+
+
+@pytest.mark.parametrize("sq,chunk", [(64, 16), (64, 64), (96, 32)])
+@pytest.mark.parametrize("window", [None, 24])
+def test_blocked_sdpa_matches_direct(sq, chunk, window):
+    q = _rand((2, sq, 4, 16), 0)
+    k = _rand((2, sq, 2, 16), 1)
+    v = _rand((2, sq, 2, 16), 2)
+    got = attention.blocked_sdpa(q, k, v, causal=True, window=window,
+                                 q_chunk=chunk)
+    want = _direct(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_blocked_sdpa_chunk_invariance():
+    """Chunk size must not change the result (flash invariant)."""
+    q = _rand((1, 128, 4, 16), 3)
+    k = _rand((1, 128, 4, 16), 4)
+    v = _rand((1, 128, 4, 16), 5)
+    outs = [attention.blocked_sdpa(q, k, v, q_chunk=c)
+            for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_matches_full():
+    """One-position decode over a cache == the last row of full attention."""
+    B, S, H, HK, D = 2, 32, 4, 2, 16
+    q_all = _rand((B, S, H, D), 6)
+    k = _rand((B, S, HK, D), 7)
+    v = _rand((B, S, HK, D), 8)
+
+    class Cfg:
+        attn_softcap = None
+        n_kv_heads = HK
+        hd = D
+
+    full = _direct(q_all, k, v, causal=True)
+    # cache padded beyond pos with garbage — mask must hide it
+    pad = 8
+    kc = jnp.concatenate([k, _rand((B, pad, HK, D), 9) * 100], axis=1)
+    vc = jnp.concatenate([v, _rand((B, pad, HK, D), 10) * 100], axis=1)
+    got = attention.decode_attention(q_all[:, -1:], kc, vc, Cfg(),
+                                     pos=jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(0, 1000), st.integers(1, 64))
+@settings(max_examples=10)
+def test_rope_preserves_norm(seed, pos):
+    x = _rand((1, 1, 2, 32), seed)
+    cos, sin = layers.rope_angles(jnp.asarray([[pos]]), 32)
+    y = layers.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(float(jnp.linalg.norm(x)),
+                               float(jnp.linalg.norm(y)), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    q = _rand((1, 1, 1, 16), 0)
+    k = _rand((1, 1, 1, 16), 1)
+
+    def dot_at(i, j):
+        ci, si = layers.rope_angles(jnp.asarray([[i]]), 16)
+        cj, sj = layers.rope_angles(jnp.asarray([[j]]), 16)
+        qi = layers.apply_rope(q, ci, si)
+        kj = layers.apply_rope(k, cj, sj)
+        return float(jnp.sum(qi * kj))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(7, 7) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+
+def test_rope_partial_fraction_leaves_tail():
+    x = _rand((1, 1, 1, 32), 2)
+    cos, sin = layers.rope_angles(jnp.asarray([[9]]), 32, fraction=0.5)
+    y = layers.apply_rope(x, cos, sin, fraction=0.5)
+    assert (np.asarray(y)[..., 16:] == np.asarray(x)[..., 16:]).all()
+    assert not (np.asarray(y)[..., :16] == np.asarray(x)[..., :16]).all()

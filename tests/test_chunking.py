@@ -1,0 +1,79 @@
+"""Adaptive partitioning + file-based mode == in-memory single shot."""
+import numpy as np
+
+from repro.core import chunking, mining, sparsity
+from repro.data import synthea
+from repro.data.dbmart import from_rows
+from tests.conftest import random_dbmart
+
+
+def _flat_set(seq, dur, pat, mask):
+    seq, dur, pat, mask = (np.asarray(x) for x in (seq, dur, pat, mask))
+    return set(zip(seq[mask].tolist(), dur[mask].tolist(), pat[mask].tolist()))
+
+
+def test_plan_chunks_budget_and_cover():
+    nevents = np.random.default_rng(0).integers(1, 200, 500).astype(np.int32)
+    budget = 4 << 20
+    chunks = chunking.plan_chunks(nevents, budget)
+    assert chunks[0].start == 0 and chunks[-1].stop == 500
+    for a, b in zip(chunks, chunks[1:]):
+        assert a.stop == b.start
+    for c in chunks:
+        cost = c.n_patients * c.max_events ** 2 * chunking.BYTES_PER_PAIR * 0.5
+        assert cost <= budget or c.n_patients == 1
+        assert c.max_events >= int(nevents[c.start:c.stop].max())
+
+
+def test_chunked_equals_unchunked():
+    db = random_dbmart(np.random.default_rng(5), n_patients=40, max_events=24)
+    whole = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, dur, pat, msk = mining.flatten(whole)
+    expect = _flat_set(seq, dur, pat, msk)
+    out = chunking.mine_chunked(db, budget_bytes=64 << 10)
+    got = _flat_set(out["seq"], out["dur"], out["patient"], out["mask"])
+    assert got == expect
+
+
+def test_chunked_screen_matches_global(tmp_path):
+    pats, dates, phx, _ = synthea.generate_cohort(n_patients=64, avg_events=16, seed=2)
+    db = from_rows(pats, dates, phx)
+    threshold = 4
+    whole = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    keep_ref = np.asarray(sparsity.screen_hash(whole.seq, whole.mask, threshold,
+                                               n_buckets_log2=22))
+    n_ref = int(keep_ref.sum())
+
+    out = chunking.mine_chunked(db, budget_bytes=128 << 10, threshold=threshold)
+    assert int(out["keep"].sum()) == n_ref
+
+    # file-based mode agrees too
+    paths = chunking.mine_to_files(db, str(tmp_path / "spill"),
+                                   budget_bytes=128 << 10)
+    assert len(paths) > 1
+    n_file = sum(len(part["seq"]) for part in
+                 chunking.screen_files(str(tmp_path / "spill"), threshold))
+    assert n_file == n_ref
+
+
+def test_scheduler_work_stealing():
+    from repro.data.pipeline import ChunkScheduler
+
+    db = random_dbmart(np.random.default_rng(1), n_patients=64, max_events=16)
+    sched = ChunkScheduler(db, budget_bytes=32 << 10)
+    assert len(sched.chunks) > 2
+    results = sched.run(lambda c: c.n_patients, n_workers=3)
+    assert sum(results) == 64
+    assert len(sched.completed) == len(sched.chunks)
+
+
+def test_balance_patients_lpt():
+    from repro.data.pipeline import balance_patients
+
+    nevents = np.random.default_rng(3).integers(1, 300, 256)
+    perm = balance_patients(nevents, 8)
+    assert sorted(perm.tolist()) == list(range(256))
+    cost = nevents[perm].astype(np.int64)
+    cost = cost * (cost - 1) // 2
+    shard = cost.reshape(8, 32).sum(1)
+    assert shard.max() <= 1.35 * max(shard.mean(), 1)

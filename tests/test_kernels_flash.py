@@ -1,0 +1,57 @@
+"""Flash-attention kernel vs naive oracle: shapes, dtypes, mask modes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash, ref
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _run(B, Hq, Hkv, Sq, Skv, D, dtype=jnp.float32, **kw):
+    q = _rand((B, Hq, Sq, D), dtype, 0)
+    k = _rand((B, Hkv, Skv, D), dtype, 1)
+    v = _rand((B, Hkv, Skv, D), dtype, 2)
+    got = flash.flash_attention(q, k, v, interpret=True, bq=min(128, Sq),
+                                bk=min(128, Skv), **kw)
+    want = ref.attention_ref(q, k, v, **kw)
+    return np.asarray(got), np.asarray(want)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 2, 2, 128, 64), (2, 4, 2, 256, 64), (1, 8, 1, 128, 128),
+    (1, 2, 2, 384, 32),
+])
+def test_flash_causal(B, Hq, Hkv, S, D):
+    got, want = _run(B, Hq, Hkv, S, S, D, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+def test_flash_dtypes(dtype, tol):
+    got, want = _run(1, 4, 2, 256, 256, 64, dtype=dtype, causal=True)
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_sliding_window():
+    got, want = _run(1, 2, 2, 384, 384, 64, causal=True, window=128)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_softcap():
+    got, want = _run(1, 2, 2, 256, 256, 64, causal=True, softcap=50.0)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_non_causal_cross():
+    got, want = _run(1, 2, 2, 128, 256, 64, causal=False)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_gqa_groups_match_ref():
+    got, want = _run(2, 8, 2, 128, 128, 64, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)

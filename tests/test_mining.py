@@ -1,0 +1,110 @@
+"""Mining correctness vs independent oracles (incl. the original-tSPM port)."""
+import numpy as np
+import pytest
+from hypothesis import given, seed
+from hypothesis import strategies as st
+
+from repro.core import baseline_tspm, encoding, mining
+from repro.data import dbmart as dbm
+from tests.conftest import brute_force_pairs, random_dbmart
+
+
+def _mined_tuples(mined, codec="bit"):
+    seq, dur, pat, msk = (np.asarray(x) for x in mining.flatten(mined))
+    s, e = (np.asarray(x) for x in encoding.unpack(seq[msk], codec))
+    return sorted(zip(pat[msk].tolist(), s.tolist(), e.tolist(),
+                      dur[msk].tolist()))
+
+
+@given(st.integers(0, 10_000))
+def test_triangular_matches_brute_force(s):
+    db = random_dbmart(np.random.default_rng(s))
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    assert _mined_tuples(mined) == sorted(brute_force_pairs(db))
+
+
+@given(st.integers(0, 10_000))
+def test_dense_matches_triangular(s):
+    db = random_dbmart(np.random.default_rng(s))
+    tri = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    den = mining.mine_dense(db.phenx, db.date, db.nevents)
+    assert _mined_tuples(tri) == _mined_tuples(den)
+
+
+@given(st.integers(0, 10_000))
+def test_count_formula(s):
+    db = random_dbmart(np.random.default_rng(s))
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    assert int(mined.n_mined) == int(mining.count_sequences(db.nevents))
+
+
+def test_paper_codec_identical_pairs():
+    db = random_dbmart(np.random.default_rng(1), n_codes=50)
+    a = _mined_tuples(mining.mine_triangular(db.phenx, db.date, db.nevents,
+                                             codec="bit"), "bit")
+    b = _mined_tuples(mining.mine_triangular(db.phenx, db.date, db.nevents,
+                                             codec="paper"), "paper")
+    assert a == b
+
+
+def test_durations_non_negative():
+    db = random_dbmart(np.random.default_rng(7))
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    dur = np.asarray(mined.dur)[np.asarray(mined.mask)]
+    assert (dur >= 0).all()
+
+
+def test_fused_duration_mining():
+    db = random_dbmart(np.random.default_rng(3))
+    plain = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    fused = mining.mine_triangular(db.phenx, db.date, db.nevents,
+                                   fuse_duration=True, bucket_days=30)
+    m = np.asarray(plain.mask)
+    seq2, buck = (np.asarray(x) for x in encoding.split_duration(fused.seq))
+    assert (seq2[m] == np.asarray(plain.seq)[m]).all()
+    assert (buck[m] == np.asarray(plain.dur)[m] // 30).all()
+
+
+def test_matches_original_tspm_strings(small_cohort):
+    """tSPM+ mines exactly the sequences the original tSPM mines."""
+    db, _ = small_cohort
+    rows = baseline_tspm.mine_strings(db)
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, dur, pat, msk = (np.asarray(x) for x in mining.flatten(mined))
+    got = set()
+    v = db.vocab
+    s, e = (np.asarray(x) for x in encoding.unpack(seq, "bit"))
+    for k in np.nonzero(msk)[0]:
+        got.add((int(pat[k]),
+                 v.phenx_strings[int(s[k])] + "-" + v.phenx_strings[int(e[k])],
+                 int(dur[k])))
+    assert got == {(p, st_, d) for p, st_, d in rows} or \
+        sorted(got) == sorted((p, st_, d) for p, st_, d in rows)
+    assert len(rows) == int(mined.n_mined)
+
+
+def test_first_occurrence_filter():
+    rows_p = [0, 0, 0, 0]
+    rows_d = [1, 2, 3, 4]
+    rows_x = ["A", "B", "A", "C"]
+    db = dbm.from_rows(rows_p, rows_d, rows_x)
+    f = dbm.first_occurrence_filter(db)
+    assert int(f.nevents[0]) == 3
+    kept = [f.vocab.phenx_strings[int(f.phenx[0, i])] for i in range(3)]
+    assert kept == ["A", "B", "C"]
+
+
+def test_ingest_sort_order():
+    # unsorted rows in, time-sorted patient rows out (paper's ips4o step)
+    db = dbm.from_rows([1, 0, 1, 0], [5, 9, 2, 1], ["X", "Y", "Z", "W"])
+    assert db.n_patients == 2
+    assert db.date[0, 0] <= db.date[0, 1]
+    assert db.date[1, 0] <= db.date[1, 1]
+
+
+def test_empty_patient_ok():
+    db = random_dbmart(np.random.default_rng(11))
+    db.nevents[0] = 0
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    flat_mask = np.asarray(mined.mask)
+    assert not flat_mask[0].any()

@@ -1,0 +1,46 @@
+"""MSMR-lite: feature matrices + mutual-information ranking."""
+import numpy as np
+
+from repro.core import mining, msmr, sparsity
+from tests.conftest import random_dbmart
+
+
+def test_feature_matrix_presence():
+    db = random_dbmart(np.random.default_rng(2), n_patients=20, max_events=12)
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, dur, pat, msk = mining.flatten(mined)
+    _, _, _, u_key, u_sup, n_u = sparsity.support_counts(seq, pat, msk)
+    feats = msmr.top_sequences(u_key, u_sup, k=16)
+    fm = msmr.feature_matrix(seq, pat, msk, feats, n_patients=20)
+    x = np.asarray(fm.x)
+    assert x.shape == (20, 16)
+    assert set(np.unique(x)) <= {0.0, 1.0}
+    # presence agrees with a direct check for one feature
+    fid = int(np.asarray(feats)[0])
+    seq_np, pat_np, msk_np = (np.asarray(v) for v in (seq, pat, msk))
+    for p in range(20):
+        has = bool(((seq_np == fid) & msk_np & (pat_np == p)).any())
+        assert bool(x[p, 0] == 1.0) == has
+
+
+def test_mi_ranks_informative_feature():
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 2, 400)
+    x = rng.integers(0, 2, (400, 8)).astype(np.float32)
+    x[:, 3] = y  # perfectly informative
+    x[:, 5] = np.where(rng.random(400) < 0.8, y, 1 - y)  # partially
+    scores = np.asarray(msmr.mi_scores(x, y))
+    assert int(np.argmax(scores)) == 3
+    assert scores[5] > np.delete(scores, [3, 5]).max()
+
+
+def test_jmi_greedy_selection():
+    rng = np.random.default_rng(1)
+    y = rng.integers(0, 2, 300)
+    x = rng.integers(0, 2, (300, 10)).astype(np.float32)
+    x[:, 0] = y
+    x[:, 1] = y  # redundant duplicate
+    x[:, 2] = np.where(rng.random(300) < 0.75, y, 1 - y)
+    sel = msmr.select_jmi(x, y, k=3)
+    assert sel[0] == 0 or sel[0] == 1
+    assert len(set(sel.tolist())) == 3

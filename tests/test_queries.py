@@ -1,0 +1,52 @@
+"""Utility-query helpers vs brute force (the paper's C++ helper functions)."""
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core import encoding, mining, queries
+from tests.conftest import brute_force_pairs, random_dbmart
+
+
+@given(st.integers(0, 5000))
+def test_start_end_min_duration_masks(s):
+    rng = np.random.default_rng(s)
+    db = random_dbmart(rng)
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, dur, pat, msk = (np.asarray(x) for x in mining.flatten(mined))
+    pairs = brute_force_pairs(db)
+    if not pairs:
+        return
+    x = pairs[rng.integers(len(pairs))][1]
+    d = int(rng.integers(0, 100))
+    m_start = np.asarray(queries.starts_with(seq, x)) & msk
+    m_end = np.asarray(queries.ends_with(seq, x)) & msk
+    m_dur = np.asarray(queries.min_duration(dur, d)) & msk
+    assert int(m_start.sum()) == sum(1 for (_, a, _, _) in pairs if a == x)
+    assert int(m_end.sum()) == sum(1 for (_, _, b, _) in pairs if b == x)
+    assert int(m_dur.sum()) == sum(1 for (_, _, _, dd) in pairs if dd >= d)
+
+
+@given(st.integers(0, 5000))
+def test_transitive_ends_with(s):
+    rng = np.random.default_rng(s)
+    db = random_dbmart(rng)
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, dur, pat, msk = (np.asarray(x) for x in mining.flatten(mined))
+    pairs = brute_force_pairs(db)
+    if not pairs:
+        return
+    x = pairs[rng.integers(len(pairs))][1]
+    ends = {b for (_, a, b, _) in pairs if a == x}
+    got = np.asarray(queries.transitive_ends_with(seq, msk, x)) & msk
+    expect = sum(1 for (_, _, b, _) in pairs if b in ends)
+    assert int(got.sum()) == expect
+
+
+def test_end_set_padding_and_sorting():
+    db = random_dbmart(np.random.default_rng(9))
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, _, _, msk = mining.flatten(mined)
+    x = int(np.asarray(db.phenx)[0, 0])
+    table = np.asarray(queries.end_set(seq, msk, x))
+    real = table[table != encoding.SENTINEL]
+    assert (np.diff(real) > 0).all()  # strictly sorted = unique

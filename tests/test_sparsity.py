@@ -1,0 +1,95 @@
+"""Sparsity screening: sort-based exactness + hash-based one-sided error."""
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core import baseline_tspm, encoding, mining, sparsity
+from tests.conftest import random_dbmart
+
+
+def _oracle_support(db):
+    """distinct-patient support per (start, end) string pair."""
+    from collections import defaultdict
+
+    pats = defaultdict(set)
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        for i in range(n):
+            for j in range(i + 1, n):
+                pats[(int(db.phenx[p, i]), int(db.phenx[p, j]))].add(p)
+    return {k: len(v) for k, v in pats.items()}
+
+
+@given(st.integers(0, 10_000), st.integers(1, 6))
+def test_screen_sorted_exact(s, threshold):
+    db = random_dbmart(np.random.default_rng(s))
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, dur, pat, msk = mining.flatten(mined)
+    scr = sparsity.screen_sorted(seq, dur, pat, msk, threshold)
+    support = _oracle_support(db)
+    expect = sum(1 for p in range(db.n_patients)
+                 for i in range(int(db.nevents[p]))
+                 for j in range(i + 1, int(db.nevents[p]))
+                 if support[(int(db.phenx[p, i]), int(db.phenx[p, j]))] >= threshold)
+    assert int(scr.n_kept) == expect
+    # kept prefix is sorted and sentinel-free
+    kept = np.asarray(scr.seq)[: int(scr.n_kept)]
+    assert (kept != encoding.SENTINEL).all()
+    assert (np.diff(kept) >= 0).all()
+
+
+@given(st.integers(0, 10_000), st.integers(1, 5))
+def test_screen_hash_one_sided(s, threshold):
+    """hash screen NEVER drops a non-sparse sequence; with a large table it
+    is exact on small universes."""
+    db = random_dbmart(np.random.default_rng(s))
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    keep = np.asarray(sparsity.screen_hash(mined.seq, mined.mask, threshold,
+                                           n_buckets_log2=22))
+    support = _oracle_support(db)
+    seqs = np.asarray(mined.seq)
+    msk = np.asarray(mined.mask)
+    s_arr, e_arr = (np.asarray(x) for x in encoding.unpack(seqs, "bit"))
+    for p in range(seqs.shape[0]):
+        for t in range(seqs.shape[1]):
+            if not msk[p, t]:
+                assert not keep[p, t]
+                continue
+            sup = support[(int(s_arr[p, t]), int(e_arr[p, t]))]
+            if sup >= threshold:
+                assert keep[p, t], "non-sparse sequence dropped (one-sided!)"
+
+
+def test_screen_hash_matches_exact_on_cohort(small_cohort):
+    db, _ = small_cohort
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, dur, pat, msk = mining.flatten(mined)
+    for threshold in (2, 4, 8):
+        scr = sparsity.screen_sorted(seq, dur, pat, msk, threshold)
+        keep = np.asarray(sparsity.screen_hash(mined.seq, mined.mask, threshold,
+                                               n_buckets_log2=22))
+        assert int(scr.n_kept) == int(keep.sum())
+        rows = baseline_tspm.mine_and_screen(db, threshold)
+        assert len(rows) == int(scr.n_kept)
+
+
+def test_support_counts_unique_table():
+    db = random_dbmart(np.random.default_rng(42))
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, dur, pat, msk = mining.flatten(mined)
+    _, _, _, u_key, u_sup, n_unique = sparsity.support_counts(seq, pat, msk)
+    support = _oracle_support(db)
+    assert int(n_unique) == len(support)
+    u_key, u_sup = np.asarray(u_key), np.asarray(u_sup)
+    got = {}
+    for k in range(int(n_unique)):
+        s, e = encoding.unpack(np.int64(u_key[k]), "bit")
+        got[(int(s), int(e))] = int(u_sup[k])
+    assert got == support
+
+
+def test_hash_bucket_deterministic_and_in_range():
+    ids = np.random.default_rng(0).integers(0, 2**48, 1000).astype(np.int64)
+    h1 = np.asarray(sparsity.hash_bucket(ids, 16))
+    h2 = np.asarray(sparsity.hash_bucket(ids, 16))
+    assert (h1 == h2).all() and (h1 >= 0).all() and (h1 < 2**16).all()
