@@ -6,6 +6,9 @@
   postcovid       -> vignette-2 quality (the paper's use-case claim)
   roofline        -> LM-cell roofline table (reads experiments/dryrun/*.json
                      if the dry-run sweep has been run)
+  streaming       -> incremental delta-mining ingest vs full re-mine
+                     (``--suite streaming`` runs it alone in CPU-interpret
+                     mode and writes a BENCH_streaming.json trajectory)
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -73,9 +76,27 @@ def roofline_bench():
               f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}")
 
 
+def streaming_bench(small=True, out_path=None):
+    from benchmarks import streaming
+
+    out_path = out_path or "BENCH_streaming.json"
+    # kernel backend in interpret mode: exercises the Pallas delta kernel
+    # end-to-end on CPU, same as the tier-1 kernel tests
+    streaming.main(small=small, json_path=out_path, backend="kernel")
+
+
 def main() -> None:
     small = "--full" not in sys.argv
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    if "--suite" in sys.argv:
+        i = sys.argv.index("--suite") + 1
+        suite = sys.argv[i] if i < len(sys.argv) else None
+        if suite != "streaming":
+            raise SystemExit(f"unknown --suite {suite!r} (have: streaming)")
+        _section("streaming ingest (delta vs re-mine)")
+        streaming_bench(small=small)
+        return
 
     _section("comparison (paper Table 1)")
     from benchmarks import comparison

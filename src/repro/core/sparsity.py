@@ -114,6 +114,17 @@ def hash_bucket(seq, n_buckets_log2: int):
     return (h & ((1 << n_buckets_log2) - 1)).astype(jnp.int32)
 
 
+def row_first_flags(sorted_rows):
+    """First-occurrence flags on row-wise sorted sentinel-padded id rows —
+    the per-patient dedup step shared by the batch screen and the streaming
+    sketch (stream/counts), so their distinct-(patient, sequence) semantics
+    cannot drift apart."""
+    first = jnp.concatenate(
+        [jnp.ones((sorted_rows.shape[0], 1), bool),
+         sorted_rows[:, 1:] != sorted_rows[:, :-1]], axis=1)
+    return first & (sorted_rows != SENTINEL)
+
+
 def local_bucket_counts(seq, mask, n_buckets_log2: int):
     """Per-shard distinct-patient bucket counts for row-major [P, T] input.
 
@@ -125,9 +136,7 @@ def local_bucket_counts(seq, mask, n_buckets_log2: int):
     P = seq.shape[0]
     flat = jnp.where(mask, seq, SENTINEL).reshape(P, -1)
     srt = jnp.sort(flat, axis=1)
-    first = jnp.concatenate(
-        [jnp.ones((P, 1), bool), srt[:, 1:] != srt[:, :-1]], axis=1)
-    first &= srt != SENTINEL
+    first = row_first_flags(srt)
     h = hash_bucket(srt, n_buckets_log2)
     counts = jnp.zeros(1 << n_buckets_log2, jnp.int32)
     return counts.at[h.reshape(-1)].add(first.reshape(-1).astype(jnp.int32))

@@ -24,22 +24,36 @@ from repro.core import chunking
 from repro.data.dbmart import DBMart
 
 
-def balance_patients(nevents: np.ndarray, n_shards: int) -> np.ndarray:
+def balance_buckets(nevents: np.ndarray, n_shards: int) -> list[list[int]]:
     """LPT assignment of patients to shards by pair-count cost.
 
-    Returns a permutation such that contiguous equal slices of the permuted
-    patient axis have near-equal total n(n-1)/2 cost."""
+    Bucket capacity rounds *up* (``ceil(P / n_shards)``): with a floor
+    capacity, the ``P % n_shards`` remainder patients found every bucket
+    "full" and all piled into shard 0."""
     cost = nevents.astype(np.int64) * (nevents.astype(np.int64) - 1) // 2
     order = np.argsort(-cost)
     loads = np.zeros(n_shards, np.int64)
     buckets: list[list[int]] = [[] for _ in range(n_shards)]
-    per = len(nevents) // n_shards
+    per = -(-len(nevents) // n_shards)
     for p in order:
         k = int(np.argmin(np.where(
             np.asarray([len(b) for b in buckets]) < per, loads, np.iinfo(np.int64).max)))
         buckets[k].append(int(p))
         loads[k] += int(cost[p])
-    return np.concatenate([np.asarray(b, np.int64) for b in buckets])
+    return buckets
+
+
+def balance_patients(nevents: np.ndarray, n_shards: int) -> np.ndarray:
+    """Permutation such that contiguous equal slices of the permuted patient
+    axis have near-equal total n(n-1)/2 cost (see :func:`balance_buckets`).
+
+    Exact only when ``len(nevents) % n_shards == 0`` (equal slices then
+    coincide with the buckets); with a remainder, bucket sizes differ by
+    one and equal-slice cuts straddle bucket boundaries — slice by
+    :func:`balance_buckets` sizes (or use the buckets directly) instead."""
+    return np.concatenate([
+        np.asarray(b, np.int64)
+        for b in balance_buckets(nevents, n_shards)])
 
 
 def shard_batch(batch: dict, mesh, batch_axes=("pod", "data")) -> dict:

@@ -1,0 +1,56 @@
+"""jit'd wrapper: pad -> Pallas delta kernel -> 64-bit packed Mined slab."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding
+from repro.core.mining import Mined
+from repro.kernels.tspm_delta import delta as _k
+from repro.kernels.util import pad_to as _pad_to
+
+
+def delta_pairgen(phenx, date, n_old, n_new, new_phenx, new_date,
+                  codec: str = "bit", fuse_duration: bool = False,
+                  bucket_days: int = 30, pb: int = 8, tile: int = 128,
+                  interpret: bool | None = None) -> Mined:
+    """Kernel-backed delta mining to the [P, E, D] slab (== delta ref)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    phenx = jnp.asarray(phenx, jnp.int32)
+    date = jnp.asarray(date, jnp.int32)
+    n_old = jnp.asarray(n_old, jnp.int32)
+    n_new = jnp.asarray(n_new, jnp.int32)
+    new_phenx = jnp.asarray(new_phenx, jnp.int32)
+    new_date = jnp.asarray(new_date, jnp.int32)
+    P, E = phenx.shape
+    D = new_phenx.shape[1]
+    ti = min(tile, max(128, 1 << int(np.ceil(np.log2(max(E, 1))))))
+    tj = min(tile, max(128, 1 << int(np.ceil(np.log2(max(D, 1))))))
+    phenx_p = _pad_to(phenx, ti, 1)
+    date_p = _pad_to(date, ti, 1)
+    new_phenx_p = _pad_to(new_phenx, tj, 1)
+    new_date_p = _pad_to(new_date, tj, 1)
+    pbb = min(pb, P)
+    phenx_p = _pad_to(phenx_p, pbb, 0)
+    date_p = _pad_to(date_p, pbb, 0)
+    new_phenx_p = _pad_to(new_phenx_p, pbb, 0)
+    new_date_p = _pad_to(new_date_p, pbb, 0)
+    nold_p = _pad_to(n_old, pbb, 0)
+    nnew_p = _pad_to(n_new, pbb, 0)
+
+    s, e, dur, mask = _k.delta_planes(
+        phenx_p, date_p, nold_p, nnew_p, new_phenx_p, new_date_p,
+        pb=pbb, ti=ti, tj=tj, interpret=interpret)
+    s = s[:P, :E, :D]
+    e = e[:P, :E, :D]
+    dur = dur[:P, :E, :D]
+    mask = mask[:P, :E, :D]
+
+    seq = encoding.pack(jnp.maximum(s, 0), jnp.maximum(e, 0), codec)
+    if fuse_duration:
+        seq = encoding.fuse_duration(
+            seq, encoding.bucket_duration(dur, bucket_days))
+    seq = jnp.where(mask, seq, encoding.SENTINEL)
+    return Mined(seq, dur, mask)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the delta pair-generation kernel ([P, E, D] slab)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def delta_planes_ref(phenx, date, n_old, n_new, new_phenx, new_date):
+    """Reference (start, end, duration, mask) planes, each [P, E, D]."""
+    phenx = jnp.asarray(phenx, jnp.int32)
+    date = jnp.asarray(date, jnp.int32)
+    n_old = jnp.asarray(n_old, jnp.int32)
+    n_new = jnp.asarray(n_new, jnp.int32)
+    new_phenx = jnp.asarray(new_phenx, jnp.int32)
+    new_date = jnp.asarray(new_date, jnp.int32)
+    E = phenx.shape[-1]
+    D = new_phenx.shape[-1]
+    gi = jnp.arange(E, dtype=jnp.int32)[None, :, None]
+    gj = jnp.arange(D, dtype=jnp.int32)[None, None, :]
+    mask = (gi < n_old[:, None, None] + gj) & (gj < n_new[:, None, None])
+    s = jnp.where(mask, phenx[:, :, None], -1)
+    e = jnp.where(mask, new_phenx[:, None, :], -1)
+    dur = jnp.where(mask, new_date[:, None, :] - date[:, :, None], 0)
+    return s, e, dur, mask

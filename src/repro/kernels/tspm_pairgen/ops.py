@@ -8,16 +8,7 @@ import numpy as np
 from repro.core import encoding
 from repro.core.mining import Mined
 from repro.kernels.tspm_pairgen import pairgen as _k
-
-
-def _pad_to(x, m, axis, value=0):
-    n = x.shape[axis]
-    pad = (-n) % m
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
+from repro.kernels.util import pad_to as _pad_to
 
 
 def pairgen(phenx, date, nevents, codec: str = "bit",

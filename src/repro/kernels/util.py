@@ -1,0 +1,15 @@
+"""Shared helpers for the kernel op wrappers."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_to(x, m, axis, value=0):
+    """Pad ``axis`` of ``x`` up to the next multiple of ``m``."""
+    n = x.shape[axis]
+    pad = (-n) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)

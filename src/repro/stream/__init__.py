@@ -1,0 +1,23 @@
+"""Streaming mining subsystem (incremental tSPM+).
+
+Batch mining re-derives all ``n(n-1)/2`` pairs per patient on every run;
+a clinical stream appends a handful of events per encounter, so only the
+``O(delta * n)`` pairs ending in a new event are actually new.  This
+package keeps the screened sequence corpus continuously up to date:
+
+  * ``store``   — device-resident padded patient history planes with
+                  per-patient cursors, regrowth, and byte-budget eviction
+                  (the streaming analogue of core/chunking);
+  * ``delta``   — delta mining ([P, E, D] slabs; jnp reference + the
+                  kernels/tspm_delta Pallas kernel);
+  * ``counts``  — online support sketch: exact distinct-(patient, seq)
+                  hash-bucket counts, incrementally updated, mergeable
+                  with batch-screen counts (core/sparsity);
+  * ``service`` — micro-batching ingest loop + snapshot queries.
+
+Invariant (property-tested): replaying a dbmart event-by-event through
+``service.StreamService`` yields the same corpus, support counts, and
+query masks as ``core.mining.mine`` + ``core.sparsity`` on the full
+dbmart.
+"""
+from repro.stream import counts, delta, service, store  # noqa: F401

@@ -1,0 +1,112 @@
+"""Online support sketch: incremental distinct-(patient, sequence) counts.
+
+Batch screening (core/sparsity.local_bucket_counts) dedupes sequences per
+patient row, multiply-shift hashes them into 2^H buckets and scatter-adds.
+The streaming sketch maintains the *same* bucket table incrementally: per
+patient it keeps the sorted set of sequence ids already contributed, and a
+tick's delta slab increments a bucket only for ids the patient has never
+produced (dedup within the delta by sort-run flags, against history by
+binary search).  Consequences, both property-tested:
+
+  * the table equals ``local_bucket_counts`` of the full batch-mined
+    corpus after any replay order — not an approximation of it;
+  * it stays mergeable with batch-screen counts
+    (``sparsity.merge_bucket_counts``) and keeps the one-sided error of
+    the hash screen: collisions only ever over-count, so a non-sparse
+    sequence is never dropped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparsity
+from repro.core.encoding import SENTINEL
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets_log2",))
+def sketch_update(counts, stored, seq, mask, n_buckets_log2: int):
+    """One tick: (counts', merged per-patient sets, per-row novel counts).
+
+    ``stored`` [B, C] are the patients' sorted sentinel-padded sequence
+    sets; ``seq``/``mask`` [B, T] the tick's delta slab rows.
+    """
+    B, C = stored.shape
+    flat = jnp.where(mask, jnp.asarray(seq, jnp.int64), SENTINEL).reshape(B, -1)
+    srt = jnp.sort(flat, axis=1)
+    first = sparsity.row_first_flags(srt)   # same dedup as the batch screen
+    idx = jax.vmap(jnp.searchsorted)(stored, srt)
+    present = jnp.take_along_axis(stored, jnp.clip(idx, 0, C - 1), axis=1) == srt
+    novel = first & ~present
+    h = sparsity.hash_bucket(srt, n_buckets_log2)
+    counts = counts.at[h.reshape(-1)].add(novel.reshape(-1).astype(jnp.int32))
+    merged = jnp.sort(
+        jnp.concatenate([stored, jnp.where(novel, srt, SENTINEL)], axis=1),
+        axis=1)
+    return counts, merged, jnp.sum(novel, axis=1).astype(jnp.int32)
+
+
+class OnlineSupportSketch:
+    """Incrementally maintained hash-bucket support table + per-patient sets."""
+
+    def __init__(self, n_buckets_log2: int = 20, pad_multiple: int = 64):
+        self.n_buckets_log2 = n_buckets_log2
+        self.pad_multiple = pad_multiple
+        self.counts = jnp.zeros(1 << n_buckets_log2, jnp.int32)
+        self.seqset = jnp.full((0, pad_multiple), SENTINEL, jnp.int64)
+        self.n_distinct = np.zeros(0, np.int32)
+
+    @property
+    def n_patients(self) -> int:
+        return self.seqset.shape[0]
+
+    def ensure_patients(self, n: int) -> None:
+        if n <= self.n_patients:
+            return
+        grow = -(-n // 8) * 8 - self.n_patients
+        self.seqset = jnp.pad(self.seqset, ((0, grow), (0, 0)),
+                              constant_values=SENTINEL)
+        self.n_distinct = np.pad(self.n_distinct, (0, grow))
+
+    def update(self, pids, seq, mask) -> int:
+        """Fold a tick's delta slab rows into the table; returns #novel ids.
+
+        Pids must be distinct: rows gather/scatter the per-patient sets,
+        so a repeated pid would double-count its buckets and lose part of
+        its merged set."""
+        pids = np.asarray(pids, np.int32)
+        if len(np.unique(pids)) != len(pids):
+            raise ValueError("duplicate pids in one sketch update")
+        self.ensure_patients(int(pids.max(initial=-1)) + 1)
+        stored = self.seqset[pids]
+        B = stored.shape[0]
+        self.counts, merged, n_novel = sketch_update(
+            self.counts, stored, jnp.asarray(seq).reshape(B, -1),
+            jnp.asarray(mask).reshape(B, -1), self.n_buckets_log2)
+        self.n_distinct[pids] += np.asarray(n_novel)
+        need = -(-int(self.n_distinct.max(initial=1)) // self.pad_multiple) \
+            * self.pad_multiple
+        if need > self.seqset.shape[1]:
+            need = max(need, 2 * self.seqset.shape[1])
+            self.seqset = jnp.pad(
+                self.seqset, ((0, 0), (0, need - self.seqset.shape[1])),
+                constant_values=SENTINEL)
+        C = self.seqset.shape[1]
+        if merged.shape[1] < C:
+            merged = jnp.pad(merged, ((0, 0), (0, C - merged.shape[1])),
+                             constant_values=SENTINEL)
+        self.seqset = self.seqset.at[pids].set(merged[:, :C])
+        return int(np.asarray(n_novel).sum())
+
+    # --- interop with the batch screen -------------------------------------
+    def merged_with(self, batch_counts):
+        """Sketch counts + batch-screen bucket counts (same table format)."""
+        return sparsity.merge_bucket_counts(self.counts, batch_counts)
+
+    def keep_mask(self, seq, mask, threshold: int):
+        """Hash-screen keep mask over any corpus using the live table."""
+        return sparsity.screen_hash_from_counts(
+            seq, mask, self.counts, threshold, self.n_buckets_log2)

@@ -1,0 +1,204 @@
+"""Micro-batching streaming ingest service + snapshot queries.
+
+Modeled on serving/engine.py's wave scheduler: ``(patient, events)`` deltas
+queue up, each tick admits up to ``tick_patients`` *distinct* patients
+(a second delta for the same patient defers to the next tick, like the
+engine's length-bucketed admission), pads the deltas to a ``[B, D]`` batch
+and runs one jitted ingest step:
+
+    admit -> append at cursors -> delta-mine [B, E, D] slab
+          -> online sketch update -> corpus log append
+
+Shapes are bucketed (D and E round up to pad multiples, capacities grow
+geometrically) so the jitted step retraces O(log) times, not per tick.
+
+Snapshots expose the live corpus as flat (seq, dur, patient) arrays plus
+the sketch's bucket table; ``starts_with`` / ``ends_with`` /
+``min_duration`` masks come from core/queries and compose with the
+hash-screen keep mask, exactly as on the batch path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core import queries as queries_lib
+from repro.core import sparsity
+from repro.stream import counts as counts_lib
+from repro.stream import delta as delta_lib
+from repro.stream.store import PatientStore
+
+
+@dataclasses.dataclass
+class Delta:
+    """One patient's new events (dates non-decreasing, and >= the dates
+    already stored for the patient — streams arrive in time order)."""
+
+    key: object
+    dates: np.ndarray   # [d] int32
+    phenx: np.ndarray   # [d] int32
+
+
+class Snapshot(NamedTuple):
+    """Flat live corpus + support table (masks all-true: only real pairs)."""
+
+    seq: np.ndarray       # [N] int64
+    dur: np.ndarray       # [N] int32
+    patient: np.ndarray   # [N] int32 stable pids (admission order)
+    counts: np.ndarray    # [2^H] int32 bucket support table
+    n_buckets_log2: int
+
+
+@dataclasses.dataclass
+class TickStats:
+    n_patients: int
+    n_events: int
+    n_pairs: int          # new pairs mined this tick (Delta * n work)
+    wall_s: float
+
+
+class StreamService:
+    """Continuously-mined corpus: ingest deltas, query any time."""
+
+    def __init__(self, tick_patients: int = 8, codec: str = "bit",
+                 backend: str = "jnp", interpret: bool | None = None,
+                 n_buckets_log2: int = 20, budget_bytes: int | None = None,
+                 pad_multiple: int = 8):
+        self.tick_patients = tick_patients
+        self.codec = codec
+        self.backend = backend
+        self.interpret = interpret
+        self.store = PatientStore(pad_multiple=pad_multiple,
+                                  budget_bytes=budget_bytes)
+        self.sketch = counts_lib.OnlineSupportSketch(n_buckets_log2)
+        self.queue: deque[Delta] = deque()
+        self._corpus: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self._snap: Snapshot | None = None   # cache, invalidated per tick
+        self.stats: list[TickStats] = []
+
+    # --- ingest -------------------------------------------------------------
+    def submit(self, key, dates, phenx) -> None:
+        dates = np.asarray(dates, np.int32).reshape(-1)
+        phenx = np.asarray(phenx, np.int32).reshape(-1)
+        if len(dates) == 0:
+            return
+        self.queue.append(Delta(key, dates, phenx))
+
+    def _next_wave(self) -> list[Delta]:
+        """Distinct-patient admission; repeat deltas defer (engine idiom)."""
+        wave: list[Delta] = []
+        deferred: list[Delta] = []
+        seen: set = set()
+        while self.queue and len(wave) < self.tick_patients:
+            d = self.queue.popleft()
+            if d.key in seen:
+                deferred.append(d)
+            else:
+                seen.add(d.key)
+                wave.append(d)
+        self.queue.extendleft(reversed(deferred))
+        return wave
+
+    def tick(self) -> TickStats | None:
+        """Ingest one padded wave; returns stats (None if queue empty)."""
+        wave = self._next_wave()
+        if not wave:
+            return None
+        t0 = time.perf_counter()
+        B = len(wave)
+        pm = self.store.pad_multiple
+        D = -(-max(len(d.dates) for d in wave) // pm) * pm
+        new_phenx = np.zeros((B, D), np.int32)
+        new_date = np.zeros((B, D), np.int32)
+        n_new = np.zeros(B, np.int32)
+        for i, d in enumerate(wave):
+            n_new[i] = len(d.dates)
+            new_phenx[i, : n_new[i]] = d.phenx
+            new_date[i, : n_new[i]] = d.dates
+
+        rows, pids = self.store.admit([d.key for d in wave])
+        n_old = np.asarray(self.store.nevents)[rows].copy()
+        self.store.append(rows, new_phenx, new_date, n_new)
+
+        # slab i-axis only needs the wave's own history extent, not the
+        # longest patient in the whole store
+        Ew = -(-int((n_old + n_new).max(initial=1)) // pm) * pm
+        mined = delta_lib.delta_mine(
+            self.store.phenx[rows, :Ew], self.store.date[rows, :Ew],
+            n_old, n_new, new_phenx, new_date, codec=self.codec,
+            backend=self.backend, interpret=self.interpret)
+        self.sketch.update(pids, mined.seq, mined.mask)
+
+        m = np.asarray(mined.mask).reshape(B, -1)
+        seq = np.asarray(mined.seq).reshape(B, -1)
+        dur = np.asarray(mined.dur).reshape(B, -1)
+        pat = np.broadcast_to(pids[:, None], m.shape)
+        self._corpus.append((seq[m], dur[m], pat[m]))
+        self._snap = None
+
+        self.store.evict_over_budget()
+        st = TickStats(
+            n_patients=B, n_events=int(n_new.sum()),
+            n_pairs=int(delta_lib.count_delta_pairs(n_old, n_new)),
+            wall_s=time.perf_counter() - t0)
+        self.stats.append(st)
+        return st
+
+    def run(self) -> list[TickStats]:
+        """Drain the queue; returns per-tick stats."""
+        out = []
+        while self.queue:
+            out.append(self.tick())
+        return out
+
+    # --- snapshot / queries -------------------------------------------------
+    def snapshot(self) -> Snapshot:
+        if self._snap is not None:
+            return self._snap
+        if self._corpus:
+            seq = np.concatenate([c[0] for c in self._corpus])
+            dur = np.concatenate([c[1] for c in self._corpus])
+            pat = np.concatenate([c[2] for c in self._corpus]).astype(np.int32)
+            self._corpus = [(seq, dur, pat)]   # compact: next tick appends
+        else:
+            seq = np.zeros(0, np.int64)
+            dur = pat = np.zeros(0, np.int32)
+        self._snap = Snapshot(seq, dur, pat, np.asarray(self.sketch.counts),
+                              self.sketch.n_buckets_log2)
+        return self._snap
+
+    def screened_keep(self, threshold: int,
+                      snap: Snapshot | None = None) -> np.ndarray:
+        """Hash-screen keep mask over the live corpus (one-sided error)."""
+        snap = snap if snap is not None else self.snapshot()
+        return np.asarray(self.sketch.keep_mask(
+            snap.seq, np.ones(len(snap.seq), bool), threshold))
+
+    def _base(self, threshold: int | None) -> tuple[Snapshot, np.ndarray]:
+        snap = self.snapshot()
+        keep = (np.ones(len(snap.seq), bool) if threshold is None
+                else self.screened_keep(threshold, snap))
+        return snap, keep
+
+    def query_starts_with(self, phenx_id: int, threshold: int | None = None):
+        snap, keep = self._base(threshold)
+        return np.asarray(queries_lib.starts_with(
+            snap.seq, phenx_id, self.codec)) & keep
+
+    def query_ends_with(self, phenx_id: int, threshold: int | None = None):
+        snap, keep = self._base(threshold)
+        return np.asarray(queries_lib.ends_with(
+            snap.seq, phenx_id, self.codec)) & keep
+
+    def query_min_duration(self, days: int, threshold: int | None = None):
+        snap, keep = self._base(threshold)
+        return np.asarray(queries_lib.min_duration(snap.dur, days)) & keep
+
+    def merged_counts(self, batch_counts) -> np.ndarray:
+        """Live table merged with batch-screen counts (cold + hot cohorts)."""
+        return np.asarray(sparsity.merge_bucket_counts(
+            self.sketch.counts, batch_counts))

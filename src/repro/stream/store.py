@@ -1,0 +1,201 @@
+"""Device-resident patient history store for streaming ingest.
+
+The batch pipeline pads each cohort once (data/dbmart); a stream never
+sees the whole cohort, so the store keeps *growable* padded planes
+
+    phenx [P_cap, E_cap]   date [P_cap, E_cap]   nevents [P_cap]
+
+with per-patient cursors (``nevents``) and a jitted scatter-append.  Rows
+are physical slots; patients get a stable dense ``pid`` on first admission
+(admission order), so corpus and sketch state survive eviction.
+
+Capacity policy (the streaming analogue of core/chunking's adaptive
+partitioning):
+
+  * **regrowth** — event capacity rounds up to ``pad_multiple`` (tile
+    friendly) and doubles geometrically; row capacity doubles.
+  * **eviction** — when a byte budget is set, the resident working set is
+    replanned with ``chunking.plan_chunks`` over patients in
+    most-recently-touched-first order; everything past the first chunk
+    (the maximal recent prefix that fits the budget under the same
+    ``BYTES_PER_PAIR`` cost model as batch chunking) is spilled to host
+    memory.  Re-admission restores the spilled history, so delta mining
+    is byte-budgeted but exact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chunking
+
+
+@functools.partial(jax.jit, donate_argnums=())
+def _append_step(phenx, date, nevents, rows, new_phenx, new_date, n_new):
+    """Scatter a [B, D] delta at the per-row cursors (out-of-window drops)."""
+    D = new_phenx.shape[1]
+    E = phenx.shape[1]
+    ar = jnp.arange(D, dtype=jnp.int32)[None, :]
+    pos = nevents[rows][:, None] + ar
+    valid = ar < n_new[:, None]
+    pos = jnp.where(valid, pos, E)           # out of bounds -> mode="drop"
+    phenx = phenx.at[rows[:, None], pos].set(new_phenx, mode="drop")
+    date = date.at[rows[:, None], pos].set(new_date, mode="drop")
+    nevents = nevents.at[rows].add(n_new)
+    return phenx, date, nevents
+
+
+class PatientStore:
+    """Growable padded history planes with admission / eviction / regrowth."""
+
+    def __init__(self, pad_multiple: int = 8, budget_bytes: int | None = None,
+                 init_patients: int = 8, init_events: int = 8):
+        self.pad_multiple = pad_multiple
+        self.budget_bytes = budget_bytes
+        self.phenx = jnp.zeros((init_patients, init_events), jnp.int32)
+        self.date = jnp.zeros((init_patients, init_events), jnp.int32)
+        self.nevents = jnp.zeros(init_patients, jnp.int32)
+        self.rows: dict = {}          # patient key -> physical row
+        self.pids: dict = {}          # patient key -> stable dense pid
+        self.row_key: dict = {}       # physical row -> patient key
+        self._free: list[int] = list(range(init_patients - 1, -1, -1))
+        self._touch = np.zeros(init_patients, np.int64)
+        self._clock = 0
+        self._spilled: dict = {}      # key -> (phenx, date) host copies
+
+    # --- capacity -----------------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.phenx.shape[0]
+
+    @property
+    def max_events(self) -> int:
+        return self.phenx.shape[1]
+
+    @property
+    def n_patients(self) -> int:
+        """Total distinct patients ever admitted (resident + spilled)."""
+        return len(self.pids)
+
+    def _round(self, n: int) -> int:
+        return -(-max(n, 1) // self.pad_multiple) * self.pad_multiple
+
+    def ensure_event_capacity(self, min_events: int) -> None:
+        need = self._round(min_events)
+        if need <= self.max_events:
+            return
+        need = max(need, 2 * self.max_events)  # geometric: O(log) recompiles
+        grow = need - self.max_events
+        self.phenx = jnp.pad(self.phenx, ((0, 0), (0, grow)))
+        self.date = jnp.pad(self.date, ((0, 0), (0, grow)))
+
+    def _ensure_rows(self, n_more: int) -> None:
+        if len(self._free) >= n_more:
+            return
+        old = self.n_rows
+        new_rows = max(old, self._round(n_more))
+        self.phenx = jnp.pad(self.phenx, ((0, new_rows), (0, 0)))
+        self.date = jnp.pad(self.date, ((0, new_rows), (0, 0)))
+        self.nevents = jnp.pad(self.nevents, (0, new_rows))
+        self._touch = np.pad(self._touch, (0, new_rows))
+        self._free.extend(range(old + new_rows - 1, old - 1, -1))
+
+    # --- admission ----------------------------------------------------------
+    def admit(self, keys) -> tuple[np.ndarray, np.ndarray]:
+        """Rows (allocating / restoring as needed) + stable pids for keys.
+
+        Keys must be distinct: cursors are read once per batch, so a
+        repeated key would overwrite its own events (the service's wave
+        admission defers repeats to the next tick)."""
+        if len(set(keys)) != len(keys):
+            raise ValueError("duplicate patient keys in one admit batch")
+        missing = [k for k in keys if k not in self.rows]
+        self._ensure_rows(len(missing))
+        restored = []
+        for k in missing:
+            row = self._free.pop()
+            self.rows[k] = row
+            self.row_key[row] = k
+            if k not in self.pids:
+                self.pids[k] = len(self.pids)
+            if k in self._spilled:
+                restored.append((row, *self._spilled.pop(k)))
+        if restored:
+            d = max(len(ph) for _, ph, _ in restored)
+            self.ensure_event_capacity(d)
+            rows = np.asarray([r for r, _, _ in restored], np.int32)
+            ph = np.zeros((len(restored), d), np.int32)
+            dt = np.zeros((len(restored), d), np.int32)
+            nn = np.zeros(len(restored), np.int32)
+            for i, (_, p, t) in enumerate(restored):
+                ph[i, : len(p)] = p
+                dt[i, : len(p)] = t
+                nn[i] = len(p)
+            self.phenx, self.date, self.nevents = _append_step(
+                self.phenx, self.date, self.nevents,
+                jnp.asarray(rows), jnp.asarray(ph), jnp.asarray(dt),
+                jnp.asarray(nn))
+        self._clock += 1
+        out_rows = np.asarray([self.rows[k] for k in keys], np.int32)
+        self._touch[out_rows] = self._clock
+        return out_rows, np.asarray([self.pids[k] for k in keys], np.int32)
+
+    def append(self, rows, new_phenx, new_date, n_new) -> None:
+        """Append padded [B, D] deltas at the cursors of ``rows`` (distinct)."""
+        rows = np.asarray(rows, np.int32)
+        if len(np.unique(rows)) != len(rows):
+            raise ValueError("duplicate rows in one append batch")
+        n_old = np.asarray(self.nevents)[rows]
+        self.ensure_event_capacity(int((n_old + np.asarray(n_new)).max(initial=1)))
+        self.phenx, self.date, self.nevents = _append_step(
+            self.phenx, self.date, self.nevents, jnp.asarray(rows, jnp.int32),
+            jnp.asarray(new_phenx, jnp.int32), jnp.asarray(new_date, jnp.int32),
+            jnp.asarray(n_new, jnp.int32))
+
+    # --- eviction -----------------------------------------------------------
+    def evict_over_budget(self) -> list:
+        """Spill least-recently-touched patients until the *mining working
+        set* (pair-slab cost, BYTES_PER_PAIR model) fits the budget.
+
+        Reuses ``chunking.plan_chunks``: patients ordered most-recent-first,
+        the first planned chunk is the resident set, the tail spills.  Note
+        the budget bounds resident mining cost, not raw plane allocation:
+        the padded planes grow monotonically and at least one patient
+        always stays resident.
+        """
+        if self.budget_bytes is None or not self.rows:
+            return []
+        resident = np.asarray(sorted(self.rows.values()), np.int64)
+        order = resident[np.argsort(-self._touch[resident], kind="stable")]
+        nev = np.asarray(self.nevents)[order]
+        plan = chunking.plan_chunks(nev, self.budget_bytes,
+                                    self.pad_multiple, layout="dense")
+        victims = order[plan[0].stop:]
+        if len(victims) == 0:
+            return []
+        # one host gather + one device scatter for the whole wave
+        ph = np.asarray(self.phenx[victims])
+        dt = np.asarray(self.date[victims])
+        nn = nev[plan[0].stop:]
+        evicted = []
+        for i, row in enumerate(victims):
+            key = self.row_key.pop(int(row))
+            n = int(nn[i])
+            self._spilled[key] = (ph[i, :n], dt[i, :n])
+            del self.rows[key]
+            self._free.append(int(row))
+            evicted.append(key)
+        self.nevents = self.nevents.at[jnp.asarray(victims)].set(0)
+        return evicted
+
+    # --- introspection ------------------------------------------------------
+    def history(self, key) -> tuple[np.ndarray, np.ndarray]:
+        """(phenx, date) events stored for a patient (resident or spilled)."""
+        if key in self._spilled:
+            return self._spilled[key]
+        row = self.rows[key]
+        n = int(self.nevents[row])
+        return np.asarray(self.phenx[row, :n]), np.asarray(self.date[row, :n])

@@ -1,0 +1,33 @@
+"""Input-pipeline balancing: remainder-shard regression + invariants."""
+import numpy as np
+
+from repro.data.pipeline import balance_buckets, balance_patients
+
+
+def test_balance_patients_remainder_not_piled_on_shard0():
+    """P % n_shards != 0: every bucket used to gate at floor(P/S), so the
+    remainder patients all silently landed in shard 0."""
+    nevents = np.full(10, 20, np.int64)   # uniform cost, P=10, S=4
+    buckets = balance_buckets(nevents, 4)
+    sizes = sorted(len(b) for b in buckets)
+    assert max(sizes) <= -(-10 // 4)      # ceil capacity respected
+    assert sizes == [2, 2, 3, 3]          # not [2, 2, 2, 4]
+
+
+def test_balance_patients_remainder_is_permutation_and_balanced():
+    rng = np.random.default_rng(7)
+    for P, S in [(10, 4), (13, 8), (257, 8), (5, 7)]:
+        nevents = rng.integers(1, 200, P)
+        perm = balance_patients(nevents, S)
+        assert sorted(perm.tolist()) == list(range(P))
+        buckets = balance_buckets(nevents, S)
+        assert max(len(b) for b in buckets) <= -(-P // S)
+
+
+def test_balance_patients_cost_balance_with_remainder():
+    rng = np.random.default_rng(11)
+    nevents = rng.integers(1, 300, 250)   # 250 % 8 != 0
+    buckets = balance_buckets(nevents, 8)
+    cost = nevents.astype(np.int64) * (nevents.astype(np.int64) - 1) // 2
+    loads = np.asarray([cost[b].sum() for b in buckets])
+    assert loads.max() <= 1.35 * max(loads.mean(), 1)

@@ -1,0 +1,185 @@
+"""Streaming mining == batch mining: the subsystem's headline invariant.
+
+Replays random dbmarts as per-patient deltas (random chunk sizes, patients
+interleaved) through stream.StreamService and checks the final screened
+corpus, support counts, and query masks against core.mining + core.sparsity
+on the same dbmart.  Seeded-loop property tests so they run in offline
+environments without hypothesis.
+"""
+import numpy as np
+import pytest
+
+from repro.core import mining, queries, sparsity
+from repro.stream.service import StreamService
+from tests.conftest import random_dbmart
+
+H = 10  # small table so collisions actually happen in the one-sided test
+
+
+def replay(db, svc, rng):
+    """Submit each patient's history as random chronological chunks, with
+    patients interleaved round-robin (arbitrary arrival order)."""
+    cursors = np.zeros(db.n_patients, np.int64)
+    alive = [p for p in range(db.n_patients) if db.nevents[p] > 0]
+    while alive:
+        p = alive[int(rng.integers(len(alive)))]
+        lo = int(cursors[p])
+        hi = min(lo + int(rng.integers(1, 4)), int(db.nevents[p]))
+        svc.submit(p, db.date[p, lo:hi], db.phenx[p, lo:hi])
+        cursors[p] = hi
+        if hi == int(db.nevents[p]):
+            alive.remove(p)
+        if rng.random() < 0.3:
+            svc.run()
+    svc.run()
+
+
+def batch_reference(db, n_buckets_log2=H):
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    seq, dur, pat, msk = (np.asarray(x) for x in mining.flatten(mined))
+    cnt = np.asarray(sparsity.local_bucket_counts(
+        np.asarray(mined.seq), np.asarray(mined.mask), n_buckets_log2))
+    return seq, dur, pat, msk, cnt
+
+
+def stream_triples(svc):
+    """Corpus as (original patient key, seq, dur) triples."""
+    snap = svc.snapshot()
+    pid_to_key = {pid: k for k, pid in svc.store.pids.items()}
+    keys = np.asarray([pid_to_key[int(p)] for p in snap.patient]
+                      if len(snap.patient) else [], np.int64)
+    return snap, keys
+
+
+@pytest.mark.parametrize("case", range(6))
+def test_streaming_equals_batch(case):
+    rng = np.random.default_rng(1000 + case)
+    db = random_dbmart(rng)
+    svc = StreamService(tick_patients=int(rng.integers(1, 5)),
+                        n_buckets_log2=H)
+    replay(db, svc, rng)
+    seq, dur, pat, msk, cnt = batch_reference(db)
+    snap, keys = stream_triples(svc)
+
+    # 1. corpus multiset
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    # 2. support sketch counts are *exactly* the batch bucket counts
+    assert (snap.counts == cnt).all()
+    # 3. screened corpus
+    thr = int(rng.integers(1, 4))
+    bkeep = np.asarray(sparsity.screen_hash_from_counts(seq, msk, cnt, thr, H))
+    skeep = svc.screened_keep(thr)
+    assert sorted(zip(keys[skeep], snap.seq[skeep], snap.dur[skeep])) \
+        == sorted(zip(pat[bkeep], seq[bkeep], dur[bkeep]))
+    # 4. query masks over the live corpus
+    x = int(rng.integers(0, 30))
+    for smask, bmask in [
+        (svc.query_starts_with(x),
+         np.asarray(queries.starts_with(seq, x)) & msk),
+        (svc.query_ends_with(x, threshold=thr),
+         np.asarray(queries.ends_with(seq, x)) & bkeep),
+        (svc.query_min_duration(30),
+         np.asarray(queries.min_duration(dur, 30)) & msk),
+    ]:
+        assert sorted(zip(keys[smask], snap.seq[smask], snap.dur[smask])) \
+            == sorted(zip(pat[bmask], seq[bmask], dur[bmask]))
+
+
+def test_streaming_equals_batch_under_eviction():
+    """A tiny byte budget forces spill/restore churn; results are exact."""
+    rng = np.random.default_rng(42)
+    db = random_dbmart(rng, n_patients=10, max_events=16)
+    svc = StreamService(tick_patients=3, n_buckets_log2=H,
+                        budget_bytes=40_000)
+    replay(db, svc, rng)
+    assert svc.store._spilled or len(svc.store.rows) < 10  # budget did bite
+    seq, dur, pat, msk, cnt = batch_reference(db)
+    snap, keys = stream_triples(svc)
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert (snap.counts == cnt).all()
+
+
+def test_streaming_kernel_backend_equals_batch():
+    rng = np.random.default_rng(7)
+    db = random_dbmart(rng, n_patients=6, max_events=12)
+    svc = StreamService(tick_patients=2, n_buckets_log2=H,
+                        backend="kernel", interpret=True)
+    replay(db, svc, rng)
+    seq, dur, pat, msk, cnt = batch_reference(db)
+    snap, keys = stream_triples(svc)
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert (snap.counts == cnt).all()
+
+
+def test_sketch_merges_with_batch_screen_counts():
+    """Half the cohort batch-mined, half streamed: merged tables equal the
+    all-batch table (cold + hot cohorts screen together)."""
+    rng = np.random.default_rng(3)
+    db = random_dbmart(rng, n_patients=8, max_events=14)
+    half = db.n_patients // 2
+    cold = db.slice_patients(0, half)
+    mined = mining.mine_triangular(cold.phenx, cold.date, cold.nevents)
+    cold_cnt = np.asarray(sparsity.local_bucket_counts(
+        np.asarray(mined.seq), np.asarray(mined.mask), H))
+
+    svc = StreamService(tick_patients=2, n_buckets_log2=H)
+    hot = db.slice_patients(half, db.n_patients)
+    replay(hot, svc, rng)
+    merged = svc.merged_counts(cold_cnt)
+
+    _, _, _, _, full_cnt = batch_reference(db)
+    assert (merged == full_cnt).all()
+
+
+def test_sketch_error_is_one_sided():
+    """Collisions may false-keep, but a non-sparse sequence NEVER drops."""
+    rng = np.random.default_rng(5)
+    db = random_dbmart(rng, n_patients=12, max_events=10, n_codes=4)
+    svc = StreamService(tick_patients=4, n_buckets_log2=4)  # heavy collisions
+    replay(db, svc, rng)
+    snap, keys = stream_triples(svc)
+    thr = 3
+    keep = svc.screened_keep(thr)
+    support = {}
+    for k, s in set(zip(keys, snap.seq)):
+        support[s] = support.get(s, 0) + 1
+    for i, s in enumerate(snap.seq):
+        if support[s] >= thr:
+            assert keep[i]
+
+
+def test_service_defers_second_delta_for_same_patient():
+    svc = StreamService(tick_patients=4)
+    svc.submit(0, [1, 2], [3, 4])
+    svc.submit(0, [5], [6])
+    svc.submit(1, [1], [2])
+    st = svc.tick()
+    assert st.n_patients == 2 and len(svc.queue) == 1
+    svc.run()
+    ph, dt = svc.store.history(0)
+    assert ph.tolist() == [3, 4, 6] and dt.tolist() == [1, 2, 5]
+
+
+def test_store_regrowth_keeps_history():
+    from repro.stream.store import PatientStore
+
+    st = PatientStore(init_patients=2, init_events=8)
+    rng = np.random.default_rng(0)
+    want = {k: ([], []) for k in range(7)}
+    for step in range(30):
+        k = int(rng.integers(7))
+        d = int(rng.integers(1, 6))
+        ph = rng.integers(0, 50, d).astype(np.int32)
+        dt = np.full(d, step, np.int32)
+        rows, _ = st.admit([k])
+        st.append(rows, ph[None], dt[None], np.asarray([d], np.int32))
+        want[k][0].extend(ph.tolist())
+        want[k][1].extend(dt.tolist())
+    for k, (ph, dt) in want.items():
+        if not ph:
+            continue
+        gp, gd = st.history(k)
+        assert gp.tolist() == ph and gd.tolist() == dt
