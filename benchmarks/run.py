@@ -9,6 +9,10 @@
   streaming       -> incremental delta-mining ingest vs full re-mine
                      (``--suite streaming`` runs it alone in CPU-interpret
                      mode and writes a BENCH_streaming.json trajectory)
+  streaming_sharded -> mesh-sharded streaming service: shards-vs-single
+                     tick throughput + merged-screen (psum) cost
+                     (``--suite streaming_sharded`` writes
+                     BENCH_streaming_sharded.json)
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -85,6 +89,20 @@ def streaming_bench(small=True, out_path=None):
     streaming.main(small=small, json_path=out_path, backend="kernel")
 
 
+def streaming_sharded_bench(small=True, out_path=None):
+    from benchmarks import streaming
+
+    out_path = out_path or "BENCH_streaming_sharded.json"
+    streaming.main_sharded(small=small, json_path=out_path, backend="jnp")
+
+
+SUITES = {
+    "streaming": ("streaming ingest (delta vs re-mine)", streaming_bench),
+    "streaming_sharded": ("mesh-sharded streaming (shards vs single)",
+                          streaming_sharded_bench),
+}
+
+
 def main() -> None:
     small = "--full" not in sys.argv
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -92,10 +110,12 @@ def main() -> None:
     if "--suite" in sys.argv:
         i = sys.argv.index("--suite") + 1
         suite = sys.argv[i] if i < len(sys.argv) else None
-        if suite != "streaming":
-            raise SystemExit(f"unknown --suite {suite!r} (have: streaming)")
-        _section("streaming ingest (delta vs re-mine)")
-        streaming_bench(small=small)
+        if suite not in SUITES:
+            raise SystemExit(f"unknown --suite {suite!r} "
+                             f"(have: {', '.join(SUITES)})")
+        title, bench = SUITES[suite]
+        _section(title)
+        bench(small=small)
         return
 
     _section("comparison (paper Table 1)")

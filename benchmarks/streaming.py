@@ -22,8 +22,10 @@ import numpy as np
 
 from repro.core import mining
 from repro.data import dbmart, synthea
+from repro.launch.mesh import make_data_mesh
 from repro.launch.stream import replay_waves
 from repro.stream.service import StreamService
+from repro.stream.shard import ShardedStreamService, ShardRouter
 
 
 def one_cohort(n_patients=300, avg_events=32, n_waves=8, tick_patients=16,
@@ -74,6 +76,83 @@ def one_cohort(n_patients=300, avg_events=32, n_waves=8, tick_patients=16,
         "delta_pairs_total": sum(w["delta_pairs"] for w in waves),
         "remine_pairs_final": int(mining.count_sequences(db.nevents)),
     }
+
+
+def sharded_cohort(n_patients=120, avg_events=24, n_waves=6,
+                   tick_patients=16, seed=3, backend="jnp",
+                   shard_counts=(1, 2, 4), threshold=3):
+    """Same cohort replayed at several shard counts (LPT-pinned router,
+    ('data',) mesh for the psum table merge).
+
+    Shards run host-serial here, so per-row throughput has two readings:
+    ``events_per_s`` (serial wall) and ``events_per_s_projected`` (wall =
+    the busiest shard's tick time, what a 1-shard-per-device mesh pays —
+    the collective adds one psum, measured as ``screen_s``).
+    """
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=n_patients, avg_events=avg_events, seed=seed)
+    db = dbmart.from_rows(pats, dates, phx)
+    mesh = make_data_mesh()
+    rows = []
+    for n_shards in shard_counts:
+        router = ShardRouter.balanced(
+            list(range(db.n_patients)), np.asarray(db.nevents), n_shards)
+        svc = ShardedStreamService(
+            n_shards=n_shards, router=router, mesh=mesh,
+            tick_patients=tick_patients, backend=backend, n_buckets_log2=18)
+        t0 = time.perf_counter()
+        for _ in replay_waves(db, svc, n_waves, seed):
+            svc.run()
+        ingest_s = time.perf_counter() - t0
+        per_shard_s = [sum(t.wall_s for t in s.stats) for s in svc.shards]
+        events = sum(t.n_events for t in svc.stats)
+
+        t0 = time.perf_counter()
+        keep = svc.screened_keep(threshold)   # merged table + global mask
+        screen_s = time.perf_counter() - t0
+        rows.append({
+            "n_shards": n_shards,
+            "ingest_s": ingest_s,
+            "ticks": len(svc.stats),
+            "events": events,
+            "events_per_s": events / max(ingest_s, 1e-9),
+            "per_shard_busy_s": per_shard_s,
+            "projected_parallel_s": max(per_shard_s) if per_shard_s else 0.0,
+            "events_per_s_projected":
+                events / max(max(per_shard_s, default=0.0), 1e-9),
+            "screen_s": screen_s,
+            "kept": int(keep.sum()),
+            "corpus": int(len(svc.snapshot().seq)),
+        })
+    single = next((r for r in rows if r["n_shards"] == 1), rows[0])
+    return {
+        "patients": n_patients, "avg_events": avg_events, "waves": n_waves,
+        "threshold": threshold, "mesh_devices": mesh.devices.size,
+        "shards": rows,
+        "baseline_shards": single["n_shards"],
+        "projected_speedup_vs_single": [
+            single["projected_parallel_s"] / max(r["projected_parallel_s"],
+                                                 1e-9) for r in rows],
+    }
+
+
+def main_sharded(small=True, json_path=None, backend="jnp"):
+    scale = (100, 20, 5) if small else (400, 40, 8)
+    r = sharded_cohort(n_patients=scale[0], avg_events=scale[1],
+                       n_waves=scale[2], backend=backend)
+    print("name,us_per_call,derived")
+    for row, speedup in zip(r["shards"], r["projected_speedup_vs_single"]):
+        print(f"streaming_sharded/shards{row['n_shards']},"
+              f"{row['projected_parallel_s']*1e6:.0f},"
+              f"events_per_s={row['events_per_s']:.0f};"
+              f"projected={row['events_per_s_projected']:.0f};"
+              f"screen_us={row['screen_s']*1e6:.0f};"
+              f"speedup_vs_single={speedup:.2f}x;kept={row['kept']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"streaming_sharded/artifact,,{json_path}")
+    return r
 
 
 def main(small=True, json_path=None, backend="jnp"):

@@ -1,0 +1,60 @@
+"""JAX version-drift shims — one name per API that moved between releases.
+
+Policy (ROADMAP §Streaming subsystem): code everywhere else in the repo
+imports the *new* spelling from here and never version-checks inline, so a
+toolchain bump is a one-file change.  Shims are resolved once at import
+time by feature detection (``hasattr`` / signature inspection), never by
+parsing ``jax.__version__``.
+
+Current shims:
+
+  * ``shard_map`` — top-level ``jax.shard_map`` only exists on jax >= 0.5;
+    0.4.x ships it as ``jax.experimental.shard_map.shard_map`` and spells
+    the replication-check kwarg ``check_rep`` instead of ``check_vma``.
+  * ``cost_analysis`` / ``hlo_flops`` — ``Compiled.cost_analysis()``
+    returns a flat dict on new jax but a list of per-module dicts (usually
+    length 1) on 0.4.x, and may return ``None`` on backends without cost
+    modeling.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None,
+              **kwargs):
+    """``jax.shard_map`` with the >= 0.5 calling convention on any jax.
+
+    ``check_vma`` is translated to ``check_rep`` when the installed
+    shard_map predates the rename (the semantics match: both gate the
+    varying/replicated consistency check).
+    """
+    if check_vma is not None:
+        key = "check_vma" if "check_vma" in _SHARD_MAP_PARAMS else "check_rep"
+        kwargs[key] = check_vma
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as one flat dict on every jax version."""
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+def hlo_flops(lowered) -> float:
+    """Compiled-HLO FLOP count of a lowered computation (0.0 if unmodeled)."""
+    return float(cost_analysis(lowered.compile()).get("flops", 0.0))

@@ -9,10 +9,14 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import functools
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 _RULES: contextvars.ContextVar = contextvars.ContextVar("axis_rules",
                                                         default=None)
@@ -88,6 +92,38 @@ def param_shardings(mesh, spec_tree, struct_tree=None):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda v: isinstance(v, P))
+
+
+def merge_sharded_counts(tables, mesh=None, axis: str = "data"):
+    """Global screen table from per-shard bucket-count tables: one psum.
+
+    Per-shard sketch tables count distinct (patient, sequence) pairs over
+    *disjoint* patient sets, so the global table is their elementwise sum —
+    the same merge the batch screen does per chunk
+    (``sparsity.merge_bucket_counts``).  With a mesh, the [S, B] stack is
+    sharded over ``axis`` and reduced with a single shard_map'd psum (each
+    device folds its local shard rows first), the collective pattern of
+    ``sparsity.screen_hash``; without one, the sum runs locally.
+    """
+    stacked = jnp.stack([jnp.asarray(t) for t in tables])
+    if mesh is None:
+        return stacked.sum(axis=0)
+    n = mesh.shape[axis]
+    if stacked.shape[0] % n:   # pad with zero tables to a shardable count
+        pad = n - stacked.shape[0] % n
+        stacked = jnp.concatenate(
+            [stacked, jnp.zeros((pad,) + stacked.shape[1:], stacked.dtype)])
+    merge = _jitted_merge(mesh, axis)
+    return merge(jax.device_put(stacked, NamedSharding(mesh, P(axis))))
+
+
+@functools.lru_cache(maxsize=8)
+def _jitted_merge(mesh, axis: str):
+    # jit'd once per (mesh, axis): eager shard_map re-traces every call on
+    # jax 0.4.x, and the merge runs on every snapshot rebuild
+    return jax.jit(compat.shard_map(
+        lambda c: jax.lax.psum(c.sum(axis=0), axis), mesh=mesh,
+        in_specs=P(axis), out_specs=P()))
 
 
 def fsdp_axis_for(cfg):

@@ -28,7 +28,9 @@ def _hist_kernel(h_ref, m_ref, out_ref, *, bt: int, rows: int):
     h = h_ref[:]                                      # [rows, T]
     m = m_ref[:]
     eq = (h[:, :, None] == buckets[None, :, :]) & m[:, :, None]
-    partial = jnp.sum(eq.astype(jnp.int32), axis=(0, 1))  # [bt]
+    # dtype= pins the accumulator: with x64 enabled jnp.sum promotes int32
+    # to int64, which the int32 out_ref swap rejects
+    partial = jnp.sum(eq.astype(jnp.int32), axis=(0, 1), dtype=jnp.int32)
 
     @pl.when(pl.program_id(1) == 0)
     def _init():

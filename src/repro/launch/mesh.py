@@ -34,3 +34,12 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     n = int(np.prod(shape))
     return jax.sharding.Mesh(
         np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def make_data_mesh(n: int | None = None):
+    """1-D ('data',) mesh over up to ``n`` devices — the patient-sharding
+    mesh of the streaming service and the batch pipeline (no 'model' axis:
+    mining has no weights to TP)."""
+    devices = jax.devices()
+    n = len(devices) if n is None else min(n, len(devices))
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.data import dbmart, synthea
 from repro.stream.service import StreamService
+from repro.stream.shard import ShardedStreamService, ShardRouter
 
 
 def replay_waves(db, svc: StreamService, n_waves: int, seed: int = 0):
@@ -48,22 +49,46 @@ def main(argv=None):
     ap.add_argument("--backend", default="jnp", choices=["jnp", "kernel", "auto"])
     ap.add_argument("--budget-mb", type=int, default=0,
                     help="store byte budget in MiB (0 = unbounded)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="patient shards over the ('data',) mesh")
+    ap.add_argument("--router", default="balance",
+                    choices=["hash", "balance"],
+                    help="patient->shard routing (balance pins by LPT "
+                         "pair cost, hash needs no prior knowledge)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     pats, dates, phx, _ = synthea.generate_cohort(
         n_patients=args.patients, avg_events=args.avg_events, seed=args.seed)
     db = dbmart.from_rows(pats, dates, phx)
-    svc = StreamService(
-        tick_patients=args.tick_patients, backend=args.backend,
-        n_buckets_log2=args.buckets_log2,
-        budget_bytes=(args.budget_mb << 20) or None)
+    kw = dict(tick_patients=args.tick_patients, backend=args.backend,
+              n_buckets_log2=args.buckets_log2,
+              budget_bytes=(args.budget_mb << 20) or None)
+    if args.shards > 1:
+        from repro.launch.mesh import make_data_mesh
+
+        router = (ShardRouter.balanced(list(range(db.n_patients)),
+                                       db.nevents, args.shards)
+                  if args.router == "balance" else ShardRouter(args.shards))
+        svc = ShardedStreamService(n_shards=args.shards, router=router,
+                                   mesh=make_data_mesh(), **kw)
+    else:
+        svc = StreamService(**kw)
+
+    def _status():
+        # cheap counters only: a snapshot() here would concat + psum-merge
+        # inside the timed loop and skew the reported ingest throughput
+        if args.shards > 1:
+            corpus = sum(len(c[0]) for s in svc.shards for c in s._corpus)
+            return (f"corpus={corpus:,} resident=" +
+                    "/".join(str(len(s.store.rows)) for s in svc.shards))
+        return (f"corpus={sum(len(c[0]) for c in svc._corpus):,} "
+                f"resident={len(svc.store.rows)}")
 
     t0 = time.perf_counter()
     for w in replay_waves(db, svc, args.waves, args.seed):
         svc.run()
-        print(f"wave {w}: corpus={sum(len(c[0]) for c in svc._corpus):,} "
-              f"resident={len(svc.store.rows)}")
+        print(f"wave {w}: {_status()}")
     dt = time.perf_counter() - t0
     ev = sum(s.n_events for s in svc.stats)
     pairs = sum(s.n_pairs for s in svc.stats)

@@ -13,11 +13,13 @@ package keeps the screened sequence corpus continuously up to date:
   * ``counts``  — online support sketch: exact distinct-(patient, seq)
                   hash-bucket counts, incrementally updated, mergeable
                   with batch-screen counts (core/sparsity);
-  * ``service`` — micro-batching ingest loop + snapshot queries.
+  * ``service`` — micro-batching ingest loop + snapshot queries;
+  * ``shard``   — patient->shard router + per-shard services over the
+                  ('data',) mesh; global screen by one psum table merge.
 
 Invariant (property-tested): replaying a dbmart event-by-event through
 ``service.StreamService`` yields the same corpus, support counts, and
 query masks as ``core.mining.mine`` + ``core.sparsity`` on the full
 dbmart.
 """
-from repro.stream import counts, delta, service, store  # noqa: F401
+from repro.stream import counts, delta, service, shard, store  # noqa: F401

@@ -61,17 +61,48 @@ class TickStats:
     wall_s: float
 
 
-class StreamService:
+class SnapshotQueries:
+    """Snapshot query surface shared by the single- and sharded-shard
+    services: core/queries masks over ``snapshot()`` composed with the
+    ``screened_keep`` hash-screen mask, exactly as on the batch path.
+    Hosts need ``snapshot()``, ``screened_keep(threshold, snap)`` and
+    ``self.codec``."""
+
+    def _base(self, threshold: int | None) -> tuple[Snapshot, np.ndarray]:
+        snap = self.snapshot()
+        keep = (np.ones(len(snap.seq), bool) if threshold is None
+                else self.screened_keep(threshold, snap))
+        return snap, keep
+
+    def query_starts_with(self, phenx_id: int, threshold: int | None = None):
+        snap, keep = self._base(threshold)
+        return np.asarray(queries_lib.starts_with(
+            snap.seq, phenx_id, self.codec)) & keep
+
+    def query_ends_with(self, phenx_id: int, threshold: int | None = None):
+        snap, keep = self._base(threshold)
+        return np.asarray(queries_lib.ends_with(
+            snap.seq, phenx_id, self.codec)) & keep
+
+    def query_min_duration(self, days: int, threshold: int | None = None):
+        snap, keep = self._base(threshold)
+        return np.asarray(queries_lib.min_duration(snap.dur, days)) & keep
+
+
+class StreamService(SnapshotQueries):
     """Continuously-mined corpus: ingest deltas, query any time."""
 
     def __init__(self, tick_patients: int = 8, codec: str = "bit",
                  backend: str = "jnp", interpret: bool | None = None,
                  n_buckets_log2: int = 20, budget_bytes: int | None = None,
-                 pad_multiple: int = 8):
+                 pad_multiple: int = 8, fuse_duration: bool = False,
+                 bucket_days: int = 30):
         self.tick_patients = tick_patients
         self.codec = codec
         self.backend = backend
         self.interpret = interpret
+        self.fuse_duration = fuse_duration
+        self.bucket_days = bucket_days
         self.store = PatientStore(pad_multiple=pad_multiple,
                                   budget_bytes=budget_bytes)
         self.sketch = counts_lib.OnlineSupportSketch(n_buckets_log2)
@@ -130,6 +161,7 @@ class StreamService:
         mined = delta_lib.delta_mine(
             self.store.phenx[rows, :Ew], self.store.date[rows, :Ew],
             n_old, n_new, new_phenx, new_date, codec=self.codec,
+            fuse_duration=self.fuse_duration, bucket_days=self.bucket_days,
             backend=self.backend, interpret=self.interpret)
         self.sketch.update(pids, mined.seq, mined.mask)
 
@@ -177,26 +209,6 @@ class StreamService:
         snap = snap if snap is not None else self.snapshot()
         return np.asarray(self.sketch.keep_mask(
             snap.seq, np.ones(len(snap.seq), bool), threshold))
-
-    def _base(self, threshold: int | None) -> tuple[Snapshot, np.ndarray]:
-        snap = self.snapshot()
-        keep = (np.ones(len(snap.seq), bool) if threshold is None
-                else self.screened_keep(threshold, snap))
-        return snap, keep
-
-    def query_starts_with(self, phenx_id: int, threshold: int | None = None):
-        snap, keep = self._base(threshold)
-        return np.asarray(queries_lib.starts_with(
-            snap.seq, phenx_id, self.codec)) & keep
-
-    def query_ends_with(self, phenx_id: int, threshold: int | None = None):
-        snap, keep = self._base(threshold)
-        return np.asarray(queries_lib.ends_with(
-            snap.seq, phenx_id, self.codec)) & keep
-
-    def query_min_duration(self, days: int, threshold: int | None = None):
-        snap, keep = self._base(threshold)
-        return np.asarray(queries_lib.min_duration(snap.dur, days)) & keep
 
     def merged_counts(self, batch_counts) -> np.ndarray:
         """Live table merged with batch-screen counts (cold + hot cohorts)."""

@@ -1,0 +1,174 @@
+"""Mesh-sharded streaming mining: patient->shard router over per-shard services.
+
+The batch pipeline scales by sharding patients over the ('pod', 'data')
+mesh and merging per-shard screen tables with one psum
+(data/pipeline + core/sparsity.screen_hash).  The streaming analogue keeps
+one :class:`~repro.stream.service.StreamService` (PatientStore +
+OnlineSupportSketch + delta miner) per shard and adds two pieces:
+
+  * **router** — a patient key is pinned to a shard for its lifetime (its
+    history planes and sketch rows live there), either by a stable hash
+    (streaming default: keys arrive unannounced) or by a pinned LPT
+    assignment from ``data/pipeline.balance_buckets`` when per-patient
+    event counts are known up front (replays, backfills) — pair cost is
+    quadratic in events, so hash-balance is not work-balance;
+  * **global screen** — per-shard sketch tables count distinct
+    (patient, sequence) pairs over disjoint patient sets, so the global
+    table is their elementwise sum: one psum over the ('data',) mesh
+    (``distributed.sharding.merge_sharded_counts``), exactly the
+    collective of the batch hash screen.  Queries compose snapshot masks
+    with the merged table, so every query sees the whole cohort.
+
+Invariant (property-tested in tests/test_stream_sharded.py): replaying a
+dbmart through the sharded service equals the single-shard service and
+batch mine+screen on corpus, support counts, and query masks, for any
+shard count, router, and per-shard eviction budget.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from repro.core import sparsity
+from repro.data import pipeline
+from repro.distributed.sharding import merge_sharded_counts
+from repro.stream.service import Snapshot, SnapshotQueries, StreamService, \
+    TickStats
+
+
+def stable_shard_hash(key) -> int:
+    """Process-stable key hash (python ``hash`` is salted for strings)."""
+    if isinstance(key, (int, np.integer)):
+        # splitmix64 finalizer: avalanches dense patient ids
+        h = (int(key) + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+        h = ((h ^ (h >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+        h = ((h ^ (h >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+        return h ^ (h >> 31)
+    return zlib.crc32(repr(key).encode())
+
+
+class ShardRouter:
+    """Patient key -> shard id; sticky by construction (pure function of the
+    key, plus an optional pinned table for balanced placement)."""
+
+    def __init__(self, n_shards: int, pinned: dict | None = None):
+        self.n_shards = n_shards
+        self.pinned = pinned or {}
+
+    def route(self, key) -> int:
+        s = self.pinned.get(key)
+        if s is None:
+            s = stable_shard_hash(key) % self.n_shards
+        return s
+
+    @classmethod
+    def balanced(cls, keys, nevents, n_shards: int) -> "ShardRouter":
+        """Pin known patients by pair-count LPT (``balance_buckets``); keys
+        not in the table still hash — cold starts keep working."""
+        buckets = pipeline.balance_buckets(
+            np.asarray(nevents, np.int64), n_shards)
+        pinned = {keys[p]: s for s, b in enumerate(buckets) for p in b}
+        return cls(n_shards, pinned)
+
+
+class ShardedStreamService(SnapshotQueries):
+    """StreamService API over ``n_shards`` shard-local services.
+
+    ``mesh`` (a ('data',)-axis mesh) routes the global-table merge through
+    the shard_map psum; without one the merge is a local sum — results are
+    identical, only the collective differs.  Remaining kwargs configure
+    each shard's StreamService (note ``budget_bytes`` is *per shard*: the
+    eviction working set is a shard-local property, like the per-chunk
+    byte budget of batch chunking).
+    """
+
+    def __init__(self, n_shards: int = 1, router: ShardRouter | None = None,
+                 mesh=None, **service_kwargs):
+        if router is not None and router.n_shards != n_shards:
+            raise ValueError(f"router covers {router.n_shards} shards, "
+                             f"service has {n_shards}")
+        self.router = router or ShardRouter(n_shards)
+        self.mesh = mesh
+        self.shards = [StreamService(**service_kwargs)
+                       for _ in range(n_shards)]
+        self.codec = self.shards[0].codec
+        self.n_buckets_log2 = self.shards[0].sketch.n_buckets_log2
+        self.pids: dict = {}        # key -> global pid (first-submit order)
+        self._snap: Snapshot | None = None
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def stats(self) -> list[TickStats]:
+        return [st for svc in self.shards for st in svc.stats]
+
+    # --- ingest -------------------------------------------------------------
+    def submit(self, key, dates, phenx) -> None:
+        if len(np.asarray(dates).reshape(-1)) == 0:
+            return
+        if key not in self.pids:
+            self.pids[key] = len(self.pids)
+        self.shards[self.router.route(key)].submit(key, dates, phenx)
+
+    def tick(self) -> list[TickStats]:
+        """One wave on every shard with queued work (shard-parallel on a
+        real mesh; host-serial here).  Empty list == all queues drained."""
+        out = [st for svc in self.shards if svc.queue
+               for st in [svc.tick()] if st is not None]
+        if out:
+            self._snap = None
+        return out
+
+    def run(self) -> list[TickStats]:
+        out: list[TickStats] = []
+        while any(svc.queue for svc in self.shards):
+            out.extend(self.tick())
+        return out
+
+    # --- snapshot / queries -------------------------------------------------
+    def _global_pids(self, svc: StreamService, local_pat: np.ndarray):
+        """Translate one shard's local pids to global pids (via keys)."""
+        if len(local_pat) == 0:
+            return local_pat
+        lut = np.full(svc.store.n_patients, -1, np.int32)
+        for key, lpid in svc.store.pids.items():
+            lut[lpid] = self.pids[key]
+        return lut[local_pat]
+
+    def global_counts(self) -> np.ndarray:
+        """The merged support table (one psum over the mesh when set)."""
+        return np.asarray(merge_sharded_counts(
+            [svc.sketch.counts for svc in self.shards], self.mesh))
+
+    def snapshot(self) -> Snapshot:
+        """Whole-cohort corpus (global pids) + merged support table."""
+        if self._snap is not None:
+            return self._snap
+        snaps = [svc.snapshot() for svc in self.shards]
+        self._snap = Snapshot(
+            seq=np.concatenate([s.seq for s in snaps]),
+            dur=np.concatenate([s.dur for s in snaps]),
+            patient=np.concatenate([
+                self._global_pids(svc, s.patient)
+                for svc, s in zip(self.shards, snaps)]).astype(np.int32),
+            counts=self.global_counts(),
+            n_buckets_log2=self.n_buckets_log2)
+        return self._snap
+
+    def pid_to_key(self) -> dict:
+        return {pid: k for k, pid in self.pids.items()}
+
+    def screened_keep(self, threshold: int,
+                      snap: Snapshot | None = None) -> np.ndarray:
+        snap = snap if snap is not None else self.snapshot()
+        return np.asarray(sparsity.screen_hash_from_counts(
+            snap.seq, np.ones(len(snap.seq), bool), snap.counts, threshold,
+            self.n_buckets_log2))
+
+    def merged_counts(self, batch_counts) -> np.ndarray:
+        """Global live table merged with batch-screen counts."""
+        return np.asarray(sparsity.merge_bucket_counts(
+            self.global_counts(), batch_counts))

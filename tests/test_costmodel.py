@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import compat
 from repro.analysis import costmodel
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
@@ -25,8 +26,7 @@ def unrolled():
 
 
 def _hlo_flops(fn, *args):
-    lowered = jax.jit(fn).lower(*args)
-    return float(lowered.compile().cost_analysis().get("flops", 0.0))
+    return compat.hlo_flops(jax.jit(fn).lower(*args))
 
 
 FAMILIES = ["tspm-mlho", "gemma2-2b", "deepseek-moe-16b", "xlstm-125m",

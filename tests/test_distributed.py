@@ -63,6 +63,7 @@ def test_sharded_hash_screen_matches_global():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from functools import partial
+from repro.compat import shard_map
 from repro.core import mining, sparsity
 from repro.data import synthea, dbmart
 
@@ -75,7 +76,7 @@ ref = np.asarray(sparsity.screen_hash(mined.seq, mined.mask, 3,
 
 mesh = jax.make_mesh((8,), ("data",))
 spec = P("data")
-@partial(jax.shard_map, mesh=mesh, in_specs=(spec, spec),
+@partial(shard_map, mesh=mesh, in_specs=(spec, spec),
          out_specs=spec)
 def sharded_screen(seq, mask):
     return sparsity.screen_hash(seq, mask, 3, n_buckets_log2=18,
@@ -94,6 +95,7 @@ def test_compressed_psum_convergence():
 import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.compat import shard_map
 from repro.distributed.compression import compressed_psum_mean
 
 mesh = jax.make_mesh((8,), ("pod",))
@@ -104,7 +106,7 @@ X = rng.standard_normal((64, 16)).astype(np.float32)
 w_true = rng.standard_normal(16).astype(np.float32)
 y = X @ w_true
 
-@partial(jax.shard_map, mesh=mesh,
+@partial(shard_map, mesh=mesh,
          in_specs=(P(), P("pod"), P("pod"), P("pod")),
          out_specs=(P(), P("pod")))
 def step(w, Xs, ys, err):
@@ -113,6 +115,9 @@ def step(w, Xs, ys, err):
     g_mean, new_err = compressed_psum_mean(g, "pod", err[0])
     return g_mean, new_err[None]  # error feedback stays shard-local
 
+# jit the shard_map'd step: eager shard_map re-traces every call on
+# jax 0.4.x, which turns 300 iterations into minutes
+step = jax.jit(step)
 w = jnp.zeros(16)
 err = jax.device_put(jnp.zeros((8, 16)), NamedSharding(mesh, P("pod")))
 Xd = jax.device_put(X, NamedSharding(mesh, P("pod")))

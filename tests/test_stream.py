@@ -86,6 +86,56 @@ def test_streaming_equals_batch(case):
             == sorted(zip(pat[bmask], seq[bmask], dur[bmask]))
 
 
+@pytest.mark.parametrize("case", range(3))
+def test_streaming_fused_duration_equals_batch(case):
+    """fuse_duration=True: streaming and batch agree on the fused codec
+    (duration bucket packed into the id's low bits), for corpus, support
+    counts, screen, and the duration query (dur stays carried separately)."""
+    rng = np.random.default_rng(2000 + case)
+    db = random_dbmart(rng)
+    svc = StreamService(tick_patients=int(rng.integers(1, 5)),
+                        n_buckets_log2=H, fuse_duration=True)
+    replay(db, svc, rng)
+
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents,
+                                   fuse_duration=True)
+    seq, dur, pat, msk = (np.asarray(x) for x in mining.flatten(mined))
+    cnt = np.asarray(sparsity.local_bucket_counts(
+        np.asarray(mined.seq), np.asarray(mined.mask), H))
+    snap, keys = stream_triples(svc)
+
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert (snap.counts == cnt).all()
+    thr = int(rng.integers(1, 4))
+    bkeep = np.asarray(sparsity.screen_hash_from_counts(seq, msk, cnt, thr, H))
+    skeep = svc.screened_keep(thr)
+    assert sorted(zip(keys[skeep], snap.seq[skeep], snap.dur[skeep])) \
+        == sorted(zip(pat[bkeep], seq[bkeep], dur[bkeep]))
+    smask = svc.query_min_duration(30)
+    bmask = np.asarray(queries.min_duration(dur, 30)) & msk
+    assert sorted(zip(keys[smask], snap.seq[smask])) \
+        == sorted(zip(pat[bmask], seq[bmask]))
+
+
+def test_streaming_fused_duration_kernel_backend():
+    """The Pallas delta kernel path agrees on the fused codec too."""
+    rng = np.random.default_rng(11)
+    db = random_dbmart(rng, n_patients=5, max_events=10)
+    svc = StreamService(tick_patients=2, n_buckets_log2=H, fuse_duration=True,
+                        backend="kernel", interpret=True)
+    replay(db, svc, rng)
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents,
+                                   fuse_duration=True)
+    seq, dur, pat, msk = (np.asarray(x) for x in mining.flatten(mined))
+    cnt = np.asarray(sparsity.local_bucket_counts(
+        np.asarray(mined.seq), np.asarray(mined.mask), H))
+    snap, keys = stream_triples(svc)
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert (snap.counts == cnt).all()
+
+
 def test_streaming_equals_batch_under_eviction():
     """A tiny byte budget forces spill/restore churn; results are exact."""
     rng = np.random.default_rng(42)

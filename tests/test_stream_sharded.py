@@ -1,0 +1,142 @@
+"""Sharded streaming == single-shard streaming == batch mine+screen.
+
+Replays random dbmarts through ShardedStreamService (n_shards 1/2/4, hash
+and balanced routers, with and without a ('data',) mesh for the psum table
+merge) and checks corpus, support counts, and query masks against both a
+single-shard StreamService replay and core.mining + core.sparsity on the
+same dbmart — including under per-shard eviction.
+"""
+import numpy as np
+import pytest
+
+from repro.core import queries, sparsity
+from repro.data import pipeline
+from repro.launch.mesh import make_data_mesh
+from repro.stream.service import StreamService
+from repro.stream.shard import ShardedStreamService, ShardRouter, \
+    stable_shard_hash
+from tests.test_stream import H, batch_reference, replay, stream_triples
+
+
+def sharded_triples(svc: ShardedStreamService):
+    snap = svc.snapshot()
+    p2k = svc.pid_to_key()
+    keys = np.asarray([p2k[int(p)] for p in snap.patient]
+                      if len(snap.patient) else [], np.int64)
+    return snap, keys
+
+
+def run_replay(db, svc, seed):
+    replay(db, svc, np.random.default_rng(seed))
+    return svc
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("with_mesh", [False, True])
+def test_sharded_equals_single_shard_and_batch(n_shards, with_mesh):
+    rng = np.random.default_rng(300 + n_shards)
+    from tests.conftest import random_dbmart
+
+    db = random_dbmart(rng, n_patients=int(rng.integers(4, 12)))
+    seed = int(rng.integers(1 << 30))
+    kw = dict(tick_patients=int(rng.integers(1, 5)), n_buckets_log2=H)
+    sh = run_replay(db, ShardedStreamService(
+        n_shards=n_shards, mesh=make_data_mesh() if with_mesh else None,
+        **kw), seed)
+    single = run_replay(db, StreamService(**kw), seed)
+
+    seq, dur, pat, msk, cnt = batch_reference(db)
+    snap, keys = sharded_triples(sh)
+    ssnap, skeys = stream_triples(single)
+
+    batch_corpus = sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert sorted(zip(keys, snap.seq, snap.dur)) == batch_corpus
+    assert sorted(zip(skeys, ssnap.seq, ssnap.dur)) == batch_corpus
+    # merged table == single-shard table == batch bucket counts, exactly
+    assert (snap.counts == cnt).all()
+    assert (ssnap.counts == cnt).all()
+
+    thr = int(rng.integers(1, 4))
+    bkeep = np.asarray(sparsity.screen_hash_from_counts(seq, msk, cnt, thr, H))
+    keep = sh.screened_keep(thr)
+    skeep = single.screened_keep(thr)
+    screened = sorted(zip(pat[bkeep], seq[bkeep], dur[bkeep]))
+    assert sorted(zip(keys[keep], snap.seq[keep], snap.dur[keep])) == screened
+    assert sorted(zip(skeys[skeep], ssnap.seq[skeep],
+                      ssnap.dur[skeep])) == screened
+
+    x = int(rng.integers(0, 30))
+    for smask, bmask in [
+        (sh.query_starts_with(x),
+         np.asarray(queries.starts_with(seq, x)) & msk),
+        (sh.query_ends_with(x, threshold=thr),
+         np.asarray(queries.ends_with(seq, x)) & bkeep),
+        (sh.query_min_duration(30),
+         np.asarray(queries.min_duration(dur, 30)) & msk),
+    ]:
+        assert sorted(zip(keys[smask], snap.seq[smask], snap.dur[smask])) \
+            == sorted(zip(pat[bmask], seq[bmask], dur[bmask]))
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_equals_batch_under_eviction(n_shards):
+    """Per-shard byte budgets force spill/restore churn; results are exact."""
+    from tests.conftest import random_dbmart
+
+    rng = np.random.default_rng(43)
+    db = random_dbmart(rng, n_patients=12, max_events=16)
+    svc = ShardedStreamService(n_shards=n_shards, tick_patients=3,
+                               n_buckets_log2=H, budget_bytes=40_000)
+    replay(db, svc, rng)
+    assert any(s.store._spilled or len(s.store.rows) < db.n_patients
+               for s in svc.shards)   # at least one budget did bite
+    seq, dur, pat, msk, cnt = batch_reference(db)
+    snap, keys = sharded_triples(svc)
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert (snap.counts == cnt).all()
+
+
+def test_balanced_router_pins_by_lpt_buckets():
+    nevents = np.asarray([2, 30, 4, 30, 6, 8], np.int64)
+    keys = list("abcdef")
+    router = ShardRouter.balanced(keys, nevents, 2)
+    buckets = pipeline.balance_buckets(nevents, 2)
+    for s, b in enumerate(buckets):
+        for p in b:
+            assert router.route(keys[p]) == s
+    # unknown keys still route (hash fallback), inside range
+    assert 0 <= router.route("zz") < 2
+
+
+def test_hash_router_is_stable_and_sticky():
+    r = ShardRouter(4)
+    for key in [0, 1, 17, "patient-3", ("site", 9)]:
+        assert r.route(key) == r.route(key)
+        assert 0 <= r.route(key) < 4
+    # int hashing avalanche: dense ids spread over shards
+    shards = {r.route(i) for i in range(64)}
+    assert len(shards) == 4
+    assert stable_shard_hash("x") == stable_shard_hash("x")
+
+
+def test_sharded_merges_with_batch_screen_counts():
+    """Half the cohort batch-mined, half stream-sharded: merged tables
+    equal the all-batch table (cold + hot cohorts screen together)."""
+    from repro.core import mining
+    from tests.conftest import random_dbmart
+
+    rng = np.random.default_rng(9)
+    db = random_dbmart(rng, n_patients=8, max_events=14)
+    half = db.n_patients // 2
+    cold = db.slice_patients(0, half)
+    mined = mining.mine_triangular(cold.phenx, cold.date, cold.nevents)
+    cold_cnt = np.asarray(sparsity.local_bucket_counts(
+        np.asarray(mined.seq), np.asarray(mined.mask), H))
+
+    svc = ShardedStreamService(n_shards=2, tick_patients=2, n_buckets_log2=H)
+    replay(db.slice_patients(half, db.n_patients), svc, rng)
+    merged = svc.merged_counts(cold_cnt)
+
+    _, _, _, _, full_cnt = batch_reference(db)
+    assert (merged == full_cnt).all()
