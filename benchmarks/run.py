@@ -13,8 +13,13 @@
                      tick throughput + merged-screen (psum) cost
                      (``--suite streaming_sharded`` writes
                      BENCH_streaming_sharded.json)
+  streaming_rebalance -> live shard rebalancing on a skewed workload:
+                     sticky routing vs load-triggered patient migration
+                     (``--suite streaming_rebalance`` writes
+                     BENCH_streaming_rebalance.json)
 
-Prints ``name,us_per_call,derived`` CSV rows.
+An unknown ``--suite`` prints the available suites instead of failing
+opaquely.  Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
@@ -96,10 +101,19 @@ def streaming_sharded_bench(small=True, out_path=None):
     streaming.main_sharded(small=small, json_path=out_path, backend="jnp")
 
 
+def streaming_rebalance_bench(small=True, out_path=None):
+    from benchmarks import streaming
+
+    out_path = out_path or "BENCH_streaming_rebalance.json"
+    streaming.main_rebalance(small=small, json_path=out_path, backend="jnp")
+
+
 SUITES = {
     "streaming": ("streaming ingest (delta vs re-mine)", streaming_bench),
     "streaming_sharded": ("mesh-sharded streaming (shards vs single)",
                           streaming_sharded_bench),
+    "streaming_rebalance": ("live shard rebalancing (sticky vs migrated)",
+                            streaming_rebalance_bench),
 }
 
 
@@ -111,8 +125,10 @@ def main() -> None:
         i = sys.argv.index("--suite") + 1
         suite = sys.argv[i] if i < len(sys.argv) else None
         if suite not in SUITES:
-            raise SystemExit(f"unknown --suite {suite!r} "
-                             f"(have: {', '.join(SUITES)})")
+            listing = "\n".join(f"  {name:22s} {title}"
+                                for name, (title, _) in SUITES.items())
+            raise SystemExit(
+                f"unknown --suite {suite!r}; available suites:\n{listing}")
         title, bench = SUITES[suite]
         _section(title)
         bench(small=small)

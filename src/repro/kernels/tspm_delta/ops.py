@@ -26,6 +26,12 @@ def delta_pairgen(phenx, date, n_old, n_new, new_phenx, new_date,
     new_date = jnp.asarray(new_date, jnp.int32)
     P, E = phenx.shape
     D = new_phenx.shape[1]
+    if P == 0 or E == 0 or D == 0:
+        # zero-width slab: nothing to tile (Pallas block specs require a
+        # nonempty grid), and no pair can be valid
+        shape = (P, E, D)
+        return Mined(jnp.full(shape, encoding.SENTINEL, jnp.int64),
+                     jnp.zeros(shape, jnp.int32), jnp.zeros(shape, bool))
     ti = min(tile, max(128, 1 << int(np.ceil(np.log2(max(E, 1))))))
     tj = min(tile, max(128, 1 << int(np.ceil(np.log2(max(D, 1))))))
     phenx_p = _pad_to(phenx, ti, 1)

@@ -55,8 +55,17 @@ def main(argv=None):
                     choices=["hash", "balance"],
                     help="patient->shard routing (balance pins by LPT "
                          "pair cost, hash needs no prior knowledge)")
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="migrate patients off hot shards every N ticks "
+                         "(0 = sticky routing, no rebalancing)")
+    ap.add_argument("--imbalance-threshold", type=float, default=1.5,
+                    help="rebalance when the hottest shard's resident "
+                         "pair cost exceeds this multiple of the mean")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.rebalance_every and args.shards <= 1:
+        ap.error("--rebalance-every requires --shards > 1 "
+                 "(rebalancing migrates patients between shards)")
 
     pats, dates, phx, _ = synthea.generate_cohort(
         n_patients=args.patients, avg_events=args.avg_events, seed=args.seed)
@@ -70,8 +79,10 @@ def main(argv=None):
         router = (ShardRouter.balanced(list(range(db.n_patients)),
                                        db.nevents, args.shards)
                   if args.router == "balance" else ShardRouter(args.shards))
-        svc = ShardedStreamService(n_shards=args.shards, router=router,
-                                   mesh=make_data_mesh(), **kw)
+        svc = ShardedStreamService(
+            n_shards=args.shards, router=router, mesh=make_data_mesh(),
+            rebalance_every=args.rebalance_every or None,
+            imbalance_threshold=args.imbalance_threshold, **kw)
     else:
         svc = StreamService(**kw)
 
@@ -94,6 +105,10 @@ def main(argv=None):
     pairs = sum(s.n_pairs for s in svc.stats)
     print(f"ingested {ev:,} events / {pairs:,} pairs over "
           f"{len(svc.stats)} ticks in {dt:.2f}s ({ev/dt:,.0f} events/s)")
+    if args.shards > 1:
+        loads = svc.shard_loads()
+        print(f"migrations={len(svc.migrations)} shard_load_mb=" +
+              "/".join(f"{b / (1 << 20):.1f}" for b in loads))
 
     covid = db.vocab.phenx_index[synthea.COVID]
     m = svc.query_starts_with(covid, threshold=args.threshold)

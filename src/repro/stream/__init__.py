@@ -14,8 +14,10 @@ package keeps the screened sequence corpus continuously up to date:
                   hash-bucket counts, incrementally updated, mergeable
                   with batch-screen counts (core/sparsity);
   * ``service`` — micro-batching ingest loop + snapshot queries;
-  * ``shard``   — patient->shard router + per-shard services over the
-                  ('data',) mesh; global screen by one psum table merge.
+  * ``shard``   — patient->shard router (sticky until migrated) +
+                  per-shard services over the ('data',) mesh; global
+                  screen by one psum table merge; live patient migration
+                  and load-triggered LPT rebalancing.
 
 Invariant (property-tested): replaying a dbmart event-by-event through
 ``service.StreamService`` yields the same corpus, support counts, and

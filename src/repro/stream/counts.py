@@ -14,6 +14,12 @@ binary search).  Consequences, both property-tested:
     (``sparsity.merge_bucket_counts``) and keeps the one-sided error of
     the hash screen: collisions only ever over-count, so a non-sparse
     sequence is never dropped.
+
+Shard migration hands a patient's row between sketches with
+``extract_row`` / ``admit_row``: the sorted distinct-id set moves, and the
+bucket table transfers by subtract-at-source / add-at-dest — each side's
+table stays exactly ``local_bucket_counts`` of *its* patient set, so the
+merged (psum'd) table is unchanged by any migration.
 """
 from __future__ import annotations
 
@@ -71,6 +77,18 @@ class OnlineSupportSketch:
                               constant_values=SENTINEL)
         self.n_distinct = np.pad(self.n_distinct, (0, grow))
 
+    def _ensure_columns(self, n: int) -> None:
+        """Widen the per-patient set planes to hold ``n`` ids (round up to
+        the pad multiple, double geometrically — one growth policy for
+        tick updates and migration admits)."""
+        need = -(-max(n, 1) // self.pad_multiple) * self.pad_multiple
+        if need <= self.seqset.shape[1]:
+            return
+        need = max(need, 2 * self.seqset.shape[1])
+        self.seqset = jnp.pad(
+            self.seqset, ((0, 0), (0, need - self.seqset.shape[1])),
+            constant_values=SENTINEL)
+
     def update(self, pids, seq, mask) -> int:
         """Fold a tick's delta slab rows into the table; returns #novel ids.
 
@@ -87,19 +105,56 @@ class OnlineSupportSketch:
             self.counts, stored, jnp.asarray(seq).reshape(B, -1),
             jnp.asarray(mask).reshape(B, -1), self.n_buckets_log2)
         self.n_distinct[pids] += np.asarray(n_novel)
-        need = -(-int(self.n_distinct.max(initial=1)) // self.pad_multiple) \
-            * self.pad_multiple
-        if need > self.seqset.shape[1]:
-            need = max(need, 2 * self.seqset.shape[1])
-            self.seqset = jnp.pad(
-                self.seqset, ((0, 0), (0, need - self.seqset.shape[1])),
-                constant_values=SENTINEL)
+        self._ensure_columns(int(self.n_distinct.max(initial=1)))
         C = self.seqset.shape[1]
         if merged.shape[1] < C:
             merged = jnp.pad(merged, ((0, 0), (0, C - merged.shape[1])),
                              constant_values=SENTINEL)
         self.seqset = self.seqset.at[pids].set(merged[:, :C])
         return int(np.asarray(n_novel).sum())
+
+    # --- migration handoff --------------------------------------------------
+    def _bucket_transfer(self, ids: np.ndarray, sign: int) -> None:
+        """Scatter ``sign`` into the ids' buckets, padded to the column
+        multiple with zero weights — handoff sizes vary per patient, so an
+        exact-length hash would compile one XLA program per distinct set
+        size; quantizing keeps the variant count O(log)."""
+        cap = -(-max(len(ids), 1) // self.pad_multiple) * self.pad_multiple
+        padded = np.zeros(cap, np.int64)
+        padded[: len(ids)] = ids
+        w = np.zeros(cap, np.int32)
+        w[: len(ids)] = sign
+        h = sparsity.hash_bucket(jnp.asarray(padded), self.n_buckets_log2)
+        self.counts = self.counts.at[h].add(jnp.asarray(w))
+
+    def extract_row(self, pid: int) -> np.ndarray:
+        """Withdraw a patient's set: returns its sorted distinct sequence
+        ids and *subtracts* one from each id's bucket, so this table is
+        again exactly ``local_bucket_counts`` of the remaining patients.
+        The row stays allocated (pids are never reused) but zeroed."""
+        if pid >= self.n_patients:
+            return np.zeros(0, np.int64)
+        n = int(self.n_distinct[pid])
+        ids = np.asarray(self.seqset[pid])[:n]   # host slice: stable shapes
+        if n:
+            self._bucket_transfer(ids, -1)
+            self.seqset = self.seqset.at[pid].set(SENTINEL)
+            self.n_distinct[pid] = 0
+        return ids
+
+    def admit_row(self, pid: int, ids) -> None:
+        """Install a migrated patient's sorted distinct-id set at ``pid``
+        and *add* one to each id's bucket (the other half of the
+        subtract/add transfer; extract then admit is a global no-op)."""
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        self.ensure_patients(pid + 1)
+        self._ensure_columns(len(ids))
+        row = np.full(self.seqset.shape[1], SENTINEL, np.int64)
+        row[: len(ids)] = ids
+        self.seqset = self.seqset.at[pid].set(jnp.asarray(row))
+        self.n_distinct[pid] = len(ids)
+        if len(ids):
+            self._bucket_transfer(ids, 1)
 
     # --- interop with the batch screen -------------------------------------
     def merged_with(self, batch_counts):

@@ -1,10 +1,11 @@
 """Micro-batching streaming ingest service + snapshot queries.
 
 Modeled on serving/engine.py's wave scheduler: ``(patient, events)`` deltas
-queue up, each tick admits up to ``tick_patients`` *distinct* patients
-(a second delta for the same patient defers to the next tick, like the
-engine's length-bucketed admission), pads the deltas to a ``[B, D]`` batch
-and runs one jitted ingest step:
+queue up, each tick admits up to ``tick_patients`` *patient slots* — a
+patient's queued deltas coalesce chronologically into its slot, so one
+flooding patient fills one slot with one big delta instead of deferring
+the rest of its queue tick after tick — pads the slots to a ``[B, D]``
+batch and runs one jitted ingest step:
 
     admit -> append at cursors -> delta-mine [B, E, D] slab
           -> online sketch update -> corpus log append
@@ -61,6 +62,23 @@ class TickStats:
     wall_s: float
 
 
+@dataclasses.dataclass
+class PatientState:
+    """Everything a patient owns on a shard — the migration payload.
+
+    ``phenx``/``date`` are in the store's host-spill format, ``seq_ids``
+    is the sketch's sorted distinct-sequence set, and the corpus arrays
+    are the patient's already-mined (seq, dur) pairs; local pids stay
+    behind (the destination assigns a fresh one)."""
+
+    key: object
+    phenx: np.ndarray        # [n] int32 event codes
+    date: np.ndarray         # [n] int32 event dates
+    seq_ids: np.ndarray      # [k] int64 sorted distinct sequence ids
+    corpus_seq: np.ndarray   # [m] int64 mined pairs
+    corpus_dur: np.ndarray   # [m] int32
+
+
 class SnapshotQueries:
     """Snapshot query surface shared by the single- and sharded-shard
     services: core/queries masks over ``snapshot()`` composed with the
@@ -96,8 +114,9 @@ class StreamService(SnapshotQueries):
                  backend: str = "jnp", interpret: bool | None = None,
                  n_buckets_log2: int = 20, budget_bytes: int | None = None,
                  pad_multiple: int = 8, fuse_duration: bool = False,
-                 bucket_days: int = 30):
+                 bucket_days: int = 30, max_slot_events: int = 512):
         self.tick_patients = tick_patients
+        self.max_slot_events = max_slot_events
         self.codec = codec
         self.backend = backend
         self.interpret = interpret
@@ -120,19 +139,44 @@ class StreamService(SnapshotQueries):
         self.queue.append(Delta(key, dates, phenx))
 
     def _next_wave(self) -> list[Delta]:
-        """Distinct-patient admission; repeat deltas defer (engine idiom)."""
-        wave: list[Delta] = []
+        """Slot-level admission: up to ``tick_patients`` patient slots, and
+        queued deltas for an admitted patient coalesce into its slot
+        (dates arrive in order, and the delta slab's triangular mask makes
+        one concatenated delta mine the same pairs as its parts ticked
+        separately).  A slot stops coalescing at ``max_slot_events`` —
+        the wave's slab is padded to its *widest* slot, so an unbounded
+        slot would multiply every other patient's slab row by the flood
+        width — and once closed, the patient's remaining deltas defer in
+        order.  A flood thus drains in O(total/max_slot_events) ticks
+        (instead of one delta per tick), without inflating the batch."""
+        slots: dict[object, list[Delta]] = {}
+        width: dict[object, int] = {}
+        closed: set = set()
         deferred: list[Delta] = []
-        seen: set = set()
-        while self.queue and len(wave) < self.tick_patients:
+        for _ in range(len(self.queue)):
             d = self.queue.popleft()
-            if d.key in seen:
+            held = slots.get(d.key)
+            if d.key in closed:
                 deferred.append(d)
+            elif held is not None:
+                if width[d.key] + len(d.dates) > self.max_slot_events:
+                    closed.add(d.key)       # keep per-patient arrival order
+                    deferred.append(d)
+                else:
+                    held.append(d)
+                    width[d.key] += len(d.dates)
+            elif len(slots) < self.tick_patients:
+                slots[d.key] = [d]
+                width[d.key] = len(d.dates)
             else:
-                seen.add(d.key)
-                wave.append(d)
-        self.queue.extendleft(reversed(deferred))
-        return wave
+                deferred.append(d)
+        self.queue.extend(deferred)
+        # one concat per slot, not per queued delta: a k-delta flood
+        # coalesces in O(k), not O(k^2)
+        return [ds[0] if len(ds) == 1 else Delta(
+                    key, np.concatenate([d.dates for d in ds]),
+                    np.concatenate([d.phenx for d in ds]))
+                for key, ds in slots.items()]
 
     def tick(self) -> TickStats | None:
         """Ingest one padded wave; returns stats (None if queue empty)."""
@@ -186,6 +230,54 @@ class StreamService(SnapshotQueries):
         while self.queue:
             out.append(self.tick())
         return out
+
+    # --- migration handoff --------------------------------------------------
+    def extract_patient(self, key) -> PatientState:
+        """Withdraw a patient's full state (store history, sketch row,
+        mined corpus rows) for handoff to another service.  Queued deltas
+        are the caller's responsibility (the sharded router moves them)."""
+        pid, ph, dt = self.store.extract(key)
+        ids = self.sketch.extract_row(pid)
+        cseq, cdur = self._extract_corpus(pid)
+        self._snap = None
+        return PatientState(key, ph, dt, ids, cseq, cdur)
+
+    def admit_patient(self, state: PatientState) -> int:
+        """Install a migrated patient under a fresh local pid; the inverse
+        of ``extract_patient`` (extract there + admit here is exact: the
+        two sketch tables transfer by subtract/add, the corpus rows move
+        verbatim)."""
+        pid = self.store.admit_state(state.key, state.phenx, state.date)
+        self.sketch.admit_row(pid, state.seq_ids)
+        if len(state.corpus_seq):
+            self._corpus.append((
+                np.asarray(state.corpus_seq, np.int64),
+                np.asarray(state.corpus_dur, np.int32),
+                np.full(len(state.corpus_seq), pid, np.int32)))
+        self._snap = None
+        return pid
+
+    def _extract_corpus(self, pid: int) -> tuple[np.ndarray, np.ndarray]:
+        """Split the live corpus log: returns (and removes) pid's rows.
+
+        Blocks without the patient are kept by reference, so a migration
+        only rewrites the log blocks the patient actually appears in (not
+        the whole log per move, which would make rebalancing O(corpus))."""
+        out_seq: list[np.ndarray] = []
+        out_dur: list[np.ndarray] = []
+        kept = []
+        for bseq, bdur, bpat in self._corpus:
+            sel = bpat == pid
+            if sel.any():
+                out_seq.append(bseq[sel])
+                out_dur.append(bdur[sel])
+                kept.append((bseq[~sel], bdur[~sel], bpat[~sel]))
+            else:
+                kept.append((bseq, bdur, bpat))
+        self._corpus = kept
+        if not out_seq:
+            return np.zeros(0, np.int64), np.zeros(0, np.int32)
+        return np.concatenate(out_seq), np.concatenate(out_dur)
 
     # --- snapshot / queries -------------------------------------------------
     def snapshot(self) -> Snapshot:

@@ -6,31 +6,57 @@ mesh and merging per-shard screen tables with one psum
 one :class:`~repro.stream.service.StreamService` (PatientStore +
 OnlineSupportSketch + delta miner) per shard and adds two pieces:
 
-  * **router** — a patient key is pinned to a shard for its lifetime (its
-    history planes and sketch rows live there), either by a stable hash
-    (streaming default: keys arrive unannounced) or by a pinned LPT
-    assignment from ``data/pipeline.balance_buckets`` when per-patient
-    event counts are known up front (replays, backfills) — pair cost is
-    quadratic in events, so hash-balance is not work-balance;
+  * **router** — a patient key is *sticky until migrated*: it routes to
+    one shard (its history planes and sketch rows live there) either by a
+    stable hash (streaming default: keys arrive unannounced) or by a
+    pinned LPT assignment from ``data/pipeline.balance_buckets`` when
+    per-patient event counts are known up front (replays, backfills) —
+    pair cost is quadratic in events, so hash-balance is not
+    work-balance.  ``migrate`` re-pins the key (``ShardRouter.assign``),
+    so submissions after a handoff land on the new home;
   * **global screen** — per-shard sketch tables count distinct
     (patient, sequence) pairs over disjoint patient sets, so the global
     table is their elementwise sum: one psum over the ('data',) mesh
     (``distributed.sharding.merge_sharded_counts``), exactly the
     collective of the batch hash screen.  Queries compose snapshot masks
-    with the merged table, so every query sees the whole cohort.
+    with the merged table, so every query sees the whole cohort;
+  * **live migration** — ``migrate(key, dst)`` hands a patient between
+    shards mid-stream, and ``rebalance`` triggers migrations whenever the
+    hottest shard's resident pair cost (``chunking.BYTES_PER_PAIR``, the
+    model batch chunking and the LPT router already use) exceeds
+    ``imbalance_threshold`` x the mean — a hash-hot shard stops being hot.
 
-Invariant (property-tested in tests/test_stream_sharded.py): replaying a
-dbmart through the sharded service equals the single-shard service and
-batch mine+screen on corpus, support counts, and query masks, for any
-shard count, router, and per-shard eviction budget.
+Handoff invariants (property-tested in tests/test_stream_migration.py):
+
+  * *sticky-until-migrated routing* — a key's queued deltas move with it
+    in arrival order and the router override lands every later submit on
+    the destination, so no delta is ever mined against a partial history;
+  * *subtract/add sketch transfer* — the patient's sorted distinct-id set
+    moves wholesale; bucket counts are decremented at the source and
+    incremented at the destination, so each shard table remains exactly
+    ``local_bucket_counts`` of its own patients and the psum-merged table
+    is invariant under any migration schedule;
+  * *spill-format compatibility* — the store handoff payload is the
+    host-spill format (1-D phenx/date arrays), admitted into the
+    destination's spill slot: a migrated patient restores on first touch
+    exactly like an evicted one, and plane capacity freed at the source
+    shrinks when the patient was the high-water mark.
+
+Replaying a dbmart through the sharded service with any interleaving of
+migrations and rebalances equals the single-shard service and batch
+mine+screen on corpus, support counts, and query masks, for any shard
+count, router, and per-shard eviction budget
+(tests/test_stream_sharded.py + tests/test_stream_migration.py).
 """
 from __future__ import annotations
 
+import time
 import zlib
+from collections import deque
 
 import numpy as np
 
-from repro.core import sparsity
+from repro.core import chunking, sparsity
 from repro.data import pipeline
 from repro.distributed.sharding import merge_sharded_counts
 from repro.stream.service import Snapshot, SnapshotQueries, StreamService, \
@@ -49,8 +75,9 @@ def stable_shard_hash(key) -> int:
 
 
 class ShardRouter:
-    """Patient key -> shard id; sticky by construction (pure function of the
-    key, plus an optional pinned table for balanced placement)."""
+    """Patient key -> shard id; sticky *until migrated* (a pure function of
+    the key, overridden by the pinned table — balanced placement and
+    migration handoffs both write there)."""
 
     def __init__(self, n_shards: int, pinned: dict | None = None):
         self.n_shards = n_shards
@@ -61,6 +88,12 @@ class ShardRouter:
         if s is None:
             s = stable_shard_hash(key) % self.n_shards
         return s
+
+    def assign(self, key, shard: int) -> None:
+        """Re-pin a key (migration handoff); later routes land on ``shard``."""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range [0, {self.n_shards})")
+        self.pinned[key] = shard
 
     @classmethod
     def balanced(cls, keys, nevents, n_shards: int) -> "ShardRouter":
@@ -77,24 +110,34 @@ class ShardedStreamService(SnapshotQueries):
 
     ``mesh`` (a ('data',)-axis mesh) routes the global-table merge through
     the shard_map psum; without one the merge is a local sum — results are
-    identical, only the collective differs.  Remaining kwargs configure
-    each shard's StreamService (note ``budget_bytes`` is *per shard*: the
-    eviction working set is a shard-local property, like the per-chunk
-    byte budget of batch chunking).
+    identical, only the collective differs.  ``rebalance_every`` (ticks)
+    turns on load-triggered rebalancing: whenever the hottest shard's
+    resident pair cost exceeds ``imbalance_threshold`` x the mean, its
+    largest patients migrate to the coldest shard (greedy LPT, same
+    ``BYTES_PER_PAIR`` cost model as batch chunking).  Remaining kwargs
+    configure each shard's StreamService (note ``budget_bytes`` is *per
+    shard*: the eviction working set is a shard-local property, like the
+    per-chunk byte budget of batch chunking).
     """
 
     def __init__(self, n_shards: int = 1, router: ShardRouter | None = None,
-                 mesh=None, **service_kwargs):
+                 mesh=None, rebalance_every: int | None = None,
+                 imbalance_threshold: float = 1.5, **service_kwargs):
         if router is not None and router.n_shards != n_shards:
             raise ValueError(f"router covers {router.n_shards} shards, "
                              f"service has {n_shards}")
         self.router = router or ShardRouter(n_shards)
         self.mesh = mesh
+        self.rebalance_every = rebalance_every
+        self.imbalance_threshold = imbalance_threshold
         self.shards = [StreamService(**service_kwargs)
                        for _ in range(n_shards)]
         self.codec = self.shards[0].codec
         self.n_buckets_log2 = self.shards[0].sketch.n_buckets_log2
         self.pids: dict = {}        # key -> global pid (first-submit order)
+        self.migrations: list[tuple] = []   # (key, src, dst) history
+        self.migration_wall_s = 0.0         # host time spent in handoffs
+        self._tick_count = 0
         self._snap: Snapshot | None = None
 
     @property
@@ -120,6 +163,10 @@ class ShardedStreamService(SnapshotQueries):
                for st in [svc.tick()] if st is not None]
         if out:
             self._snap = None
+            self._tick_count += 1
+            if self.rebalance_every \
+                    and self._tick_count % self.rebalance_every == 0:
+                self.rebalance()
         return out
 
     def run(self) -> list[TickStats]:
@@ -128,12 +175,89 @@ class ShardedStreamService(SnapshotQueries):
             out.extend(self.tick())
         return out
 
+    # --- migration / rebalancing --------------------------------------------
+    def migrate(self, key, dst: int) -> None:
+        """Hand a patient to shard ``dst``: queued deltas move in arrival
+        order, then store history (spill format), sketch row (subtract/add)
+        and mined corpus rows, and the router re-pins the key.  A no-op if
+        the key already lives on ``dst``."""
+        if key not in self.pids:
+            raise KeyError(f"unknown patient key {key!r}")
+        if not 0 <= dst < self.n_shards:
+            # before any mutation: a negative dst would otherwise index
+            # shards[-1] and strand the state off-route
+            raise ValueError(f"dst {dst} out of range [0, {self.n_shards})")
+        src = self.router.route(key)
+        if src == dst:
+            return
+        t0 = time.perf_counter()
+        src_svc, dst_svc = self.shards[src], self.shards[dst]
+        queued = [d for d in src_svc.queue if d.key == key]
+        if queued:
+            src_svc.queue = deque(
+                d for d in src_svc.queue if d.key != key)
+            dst_svc.queue.extend(queued)
+        if key in src_svc.store.pids:
+            dst_svc.admit_patient(src_svc.extract_patient(key))
+        self.router.assign(key, dst)
+        self.migrations.append((key, src, dst))
+        self.migration_wall_s += time.perf_counter() - t0
+        self._snap = None
+
+    def _patient_costs(self, svc: StreamService) -> dict:
+        """Per-patient mining cost on one shard: n^2 * BYTES_PER_PAIR over
+        held patients (resident via cursors, spilled via host copies) —
+        the dense pair-slab model of chunking / store eviction."""
+        nev = np.asarray(svc.store.nevents)
+        costs = {k: int(nev[r]) ** 2 * chunking.BYTES_PER_PAIR
+                 for k, r in svc.store.rows.items()}
+        for k, (ph, _) in svc.store._spilled.items():
+            costs[k] = len(ph) ** 2 * chunking.BYTES_PER_PAIR
+        return costs
+
+    def shard_loads(self) -> list[int]:
+        """Resident pair-cost bytes per shard (the rebalance signal)."""
+        return [sum(self._patient_costs(svc).values())
+                for svc in self.shards]
+
+    def rebalance(self, imbalance_threshold: float | None = None,
+                  max_moves: int | None = None) -> list[tuple]:
+        """Greedy LPT rebalancing: while the hottest shard's load exceeds
+        ``imbalance_threshold`` x the mean, migrate its costliest patient
+        that still lowers the maximum to the coldest shard.  Every move
+        strictly decreases the load spread (sum of squares), so this
+        terminates; returns the (key, src, dst) moves made."""
+        thr = (self.imbalance_threshold if imbalance_threshold is None
+               else imbalance_threshold)
+        costs = [self._patient_costs(svc) for svc in self.shards]
+        loads = [sum(c.values()) for c in costs]
+        mean = sum(loads) / len(loads)
+        moves: list[tuple] = []
+        while max_moves is None or len(moves) < max_moves:
+            hot = max(range(len(loads)), key=loads.__getitem__)
+            cold = min(range(len(loads)), key=loads.__getitem__)
+            if loads[hot] <= thr * mean or loads[hot] == 0:
+                break
+            cands = [(c, k) for k, c in costs[hot].items()
+                     if loads[cold] + c < loads[hot]]
+            if not cands:
+                break
+            c, key = max(cands, key=lambda t: t[0])
+            self.migrate(key, cold)
+            costs[cold][key] = costs[hot].pop(key)
+            loads[hot] -= c
+            loads[cold] += c
+            moves.append((key, hot, cold))
+        return moves
+
     # --- snapshot / queries -------------------------------------------------
     def _global_pids(self, svc: StreamService, local_pat: np.ndarray):
         """Translate one shard's local pids to global pids (via keys)."""
         if len(local_pat) == 0:
             return local_pat
-        lut = np.full(svc.store.n_patients, -1, np.int32)
+        # pid_capacity, not n_patients: local pids are retired (never
+        # reused) when a patient migrates out, so the dense range has holes
+        lut = np.full(svc.store.pid_capacity, -1, np.int32)
         for key, lpid in svc.store.pids.items():
             lut[lpid] = self.pids[key]
         return lut[local_pat]

@@ -21,6 +21,18 @@ partitioning):
     ``BYTES_PER_PAIR`` cost model as batch chunking) is spilled to host
     memory.  Re-admission restores the spilled history, so delta mining
     is byte-budgeted but exact.
+  * **handoff** — ``extract`` withdraws a patient entirely (shard
+    migration), returning its history in the host-spill format;
+    ``admit_state`` is the receiving end and lands the history in the
+    spill slot, so a migrated-in patient restores lazily on first touch
+    exactly like an evicted one.  Extracted pids are never reused
+    (``_next_pid``): the sketch row at that pid stays addressable until
+    its owner zeroes it.
+  * **shrinking** — departures release capacity: ``shrink_to_fit`` trims
+    the event axis to the resident high-water mark and the row axis to
+    the highest occupied row, but only when half (or less) of a plane
+    axis is live — the hysteresis mirrors geometric growth so a
+    migrate/re-admit cycle cannot thrash recompiles.
 """
 from __future__ import annotations
 
@@ -64,6 +76,7 @@ class PatientStore:
         self._free: list[int] = list(range(init_patients - 1, -1, -1))
         self._touch = np.zeros(init_patients, np.int64)
         self._clock = 0
+        self._next_pid = 0            # pids are never reused after extract
         self._spilled: dict = {}      # key -> (phenx, date) host copies
 
     # --- capacity -----------------------------------------------------------
@@ -77,8 +90,14 @@ class PatientStore:
 
     @property
     def n_patients(self) -> int:
-        """Total distinct patients ever admitted (resident + spilled)."""
+        """Distinct patients currently held (resident + spilled)."""
         return len(self.pids)
+
+    @property
+    def pid_capacity(self) -> int:
+        """One past the largest pid ever assigned (pids outlive extraction,
+        so tables indexed by pid must size by this, not ``n_patients``)."""
+        return self._next_pid
 
     def _round(self, n: int) -> int:
         return -(-max(n, 1) // self.pad_multiple) * self.pad_multiple
@@ -120,7 +139,8 @@ class PatientStore:
             self.rows[k] = row
             self.row_key[row] = k
             if k not in self.pids:
-                self.pids[k] = len(self.pids)
+                self.pids[k] = self._next_pid
+                self._next_pid += 1
             if k in self._spilled:
                 restored.append((row, *self._spilled.pop(k)))
         if restored:
@@ -190,6 +210,69 @@ class PatientStore:
             evicted.append(key)
         self.nevents = self.nevents.at[jnp.asarray(victims)].set(0)
         return evicted
+
+    # --- migration handoff --------------------------------------------------
+    def extract(self, key) -> tuple[int, np.ndarray, np.ndarray]:
+        """Withdraw a patient entirely, returning ``(pid, phenx, date)``.
+
+        The history comes back as 1-D host arrays — the spill format — so
+        the receiving store's ``admit_state`` is exactly the spill-restore
+        path.  The pid is retired, never reused; the freed row returns to
+        the pool and ``shrink_to_fit`` reclaims plane capacity when the
+        departing patient was a high-water mark.
+        """
+        if key not in self.pids:
+            raise KeyError(key)
+        if key in self.rows:
+            row = self.rows.pop(key)
+            del self.row_key[row]
+            n = int(self.nevents[row])
+            # full-row gather (stable shape), slice on host: an exact-n
+            # device slice would compile one program per history length
+            ph = np.asarray(self.phenx[row])[:n]
+            dt = np.asarray(self.date[row])[:n]
+            self.nevents = self.nevents.at[row].set(0)
+            self._free.append(row)
+        else:
+            ph, dt = self._spilled.pop(key)
+        pid = self.pids.pop(key)
+        self.shrink_to_fit()
+        return pid, ph, dt
+
+    def admit_state(self, key, phenx, date) -> int:
+        """Admit a migrated-in patient with pre-existing history; returns
+        its fresh pid.  The history lands in the host-spill slot and
+        restores on first touch, reusing the eviction machinery verbatim
+        (no plane growth until the patient is actually mined again)."""
+        if key in self.pids:
+            raise ValueError(f"key {key!r} already admitted")
+        pid = self._next_pid
+        self._next_pid += 1
+        self.pids[key] = pid
+        self._spilled[key] = (np.asarray(phenx, np.int32).reshape(-1),
+                              np.asarray(date, np.int32).reshape(-1))
+        return pid
+
+    def shrink_to_fit(self) -> None:
+        """Release plane capacity after departures.  True hysteresis on
+        both axes: shrink fires only when <= half the axis is live, and
+        releases at most one doubling step per call — a high-water-mark
+        patient bouncing out and back (rebalance ping-pong) costs O(log)
+        reshape/retrace round trips, never one per migration."""
+        hwm_e = self._round(int(np.asarray(self.nevents).max(initial=1)))
+        if 2 * hwm_e <= self.max_events:
+            need_e = max(hwm_e, self._round(self.max_events // 2))
+            self.phenx = self.phenx[:, :need_e]
+            self.date = self.date[:, :need_e]
+        top = max(self.rows.values(), default=-1)
+        hwm_r = self._round(top + 1)
+        if 2 * hwm_r <= self.n_rows:
+            need_r = max(hwm_r, self._round(self.n_rows // 2))
+            self.phenx = self.phenx[:need_r]
+            self.date = self.date[:need_r]
+            self.nevents = self.nevents[:need_r]
+            self._touch = self._touch[:need_r]
+            self._free = [r for r in self._free if r < need_r]
 
     # --- introspection ------------------------------------------------------
     def history(self, key) -> tuple[np.ndarray, np.ndarray]:

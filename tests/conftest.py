@@ -79,6 +79,14 @@ except ModuleNotFoundError:
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
 
+def pytest_configure(config):
+    # chaos/property suites (deep sweeps, hypothesis schedules) are marked
+    # slow so tier-1 can stay fast with `-m "not slow"`
+    config.addinivalue_line(
+        "markers", "slow: deep chaos/property sweeps; deselect with "
+        '-m "not slow"')
+
+
 if HAVE_HYPOTHESIS:
     settings.register_profile(
         "repro",

@@ -201,16 +201,66 @@ def test_sketch_error_is_one_sided():
             assert keep[i]
 
 
-def test_service_defers_second_delta_for_same_patient():
+def test_service_coalesces_second_delta_into_patient_slot():
+    """Slot-level admission: a repeat delta joins its patient's slot in the
+    same tick (chronological concat) instead of deferring a wave."""
     svc = StreamService(tick_patients=4)
     svc.submit(0, [1, 2], [3, 4])
     svc.submit(0, [5], [6])
     svc.submit(1, [1], [2])
     st = svc.tick()
-    assert st.n_patients == 2 and len(svc.queue) == 1
-    svc.run()
+    assert st.n_patients == 2 and len(svc.queue) == 0
     ph, dt = svc.store.history(0)
     assert ph.tolist() == [3, 4, 6] and dt.tolist() == [1, 2, 5]
+
+
+def test_flooding_patient_drains_in_one_tick_and_stays_exact():
+    """Regression for wave deferral: one patient flooding the queue used to
+    admit one delta per tick (O(queue) ticks + O(queue^2) re-scans); slot
+    admission drains the flood in a single tick, other patients still get
+    their slots, and the mined corpus equals batch."""
+    rng = np.random.default_rng(21)
+    db = random_dbmart(rng, n_patients=3, max_events=24)
+    svc = StreamService(tick_patients=2, n_buckets_log2=H)
+    # patient 0 floods event-by-event; 1 and 2 queue behind it
+    for i in range(int(db.nevents[0])):
+        svc.submit(0, db.date[0, i : i + 1], db.phenx[0, i : i + 1])
+    for p in (1, 2):
+        n = int(db.nevents[p])
+        svc.submit(p, db.date[p, :n], db.phenx[p, :n])
+    st = svc.tick()
+    assert st.n_patients == 2                  # flood slot + patient 1
+    assert st.n_events == int(db.nevents[0]) + int(db.nevents[1])
+    assert len(svc.queue) == 1                 # only patient 2 deferred
+    svc.run()
+    seq, dur, pat, msk, cnt = batch_reference(db)
+    snap, keys = stream_triples(svc)
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert (snap.counts == cnt).all()
+
+
+def test_slot_coalescing_caps_wave_width():
+    """max_slot_events bounds a slot (the wave's slab pads to its widest
+    slot, so one flood must not inflate every other patient's row); the
+    overflow defers in per-patient order and the result stays exact."""
+    rng = np.random.default_rng(6)
+    db = random_dbmart(rng, n_patients=2, max_events=24)
+    n0 = int(db.nevents[0])
+    assert n0 > 8
+    svc = StreamService(tick_patients=4, n_buckets_log2=H,
+                        max_slot_events=8)
+    for i in range(n0):    # flood patient 0 event-by-event
+        svc.submit(0, db.date[0, i : i + 1], db.phenx[0, i : i + 1])
+    st = svc.tick()
+    assert st.n_events == 8            # slot closed at the cap
+    assert len(svc.queue) == n0 - 8    # overflow deferred, order kept
+    svc.run()
+    seq, dur, pat, msk, cnt = batch_reference(db.slice_patients(0, 1))
+    snap, keys = stream_triples(svc)
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert (snap.counts == cnt).all()
 
 
 def test_store_regrowth_keeps_history():

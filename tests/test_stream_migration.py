@@ -1,0 +1,349 @@
+"""Chaos conformance for live migration: any interleaving is exact.
+
+Random interleavings of submit / tick / evict / migrate / rebalance are
+replayed through ShardedStreamService and checked against the batch
+mine+screen oracle (core.mining + core.sparsity) and the single-shard
+StreamService — corpus, support counts, and query masks must match
+byte-for-byte for n_shards 1/2/4, including under per-shard byte-budget
+eviction and with the Pallas delta kernel.  Seeded-loop chaos runs in
+offline environments; a hypothesis-driven variant (marked ``slow``)
+explores deeper schedules when hypothesis is installed.
+
+Unit tests at the bottom pin the handoff invariants one mechanism at a
+time: queued-delta movement, subtract/add sketch transfer, spill-format
+store handoff + plane shrinking, pid retirement, and the greedy LPT
+rebalance policy.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import queries, sparsity
+from repro.stream.counts import OnlineSupportSketch
+from repro.stream.service import StreamService
+from repro.stream.shard import ShardedStreamService, ShardRouter
+from repro.stream.store import PatientStore
+from tests.conftest import random_dbmart
+from tests.test_stream import H, batch_reference, replay
+from tests.test_stream_sharded import sharded_triples
+
+
+def chaos_replay(db, svc: ShardedStreamService, rng,
+                 p_migrate=0.2, p_rebalance=0.1):
+    """test_stream.replay with migrations and rebalances interleaved at
+    random points — including while the migrated patient still has queued
+    deltas, the adversarial case for sticky-until-migrated routing."""
+    cursors = np.zeros(db.n_patients, np.int64)
+    alive = [p for p in range(db.n_patients) if db.nevents[p] > 0]
+    while alive:
+        p = alive[int(rng.integers(len(alive)))]
+        lo = int(cursors[p])
+        hi = min(lo + int(rng.integers(1, 4)), int(db.nevents[p]))
+        svc.submit(p, db.date[p, lo:hi], db.phenx[p, lo:hi])
+        cursors[p] = hi
+        if hi == int(db.nevents[p]):
+            alive.remove(p)
+        r = rng.random()
+        if r < 0.15:
+            svc.tick()
+        elif r < 0.3:
+            svc.run()
+        if svc.pids and rng.random() < p_migrate:
+            keys = list(svc.pids)
+            key = keys[int(rng.integers(len(keys)))]
+            svc.migrate(key, int(rng.integers(svc.n_shards)))
+        if rng.random() < p_rebalance:
+            svc.rebalance(imbalance_threshold=1.0 + float(rng.random()))
+    svc.run()
+    # post-drain churn: migrations of fully-ingested patients are exact too
+    for key in list(svc.pids):
+        if rng.random() < p_migrate:
+            svc.migrate(key, int(rng.integers(svc.n_shards)))
+
+
+def assert_matches_batch(svc, db, rng):
+    """Corpus, support counts, screened corpus, and query masks against the
+    batch mine+screen oracle on the same dbmart."""
+    seq, dur, pat, msk, cnt = batch_reference(db)
+    snap, keys = sharded_triples(svc)
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert (snap.counts == cnt).all()
+
+    thr = int(rng.integers(1, 4))
+    bkeep = np.asarray(sparsity.screen_hash_from_counts(seq, msk, cnt, thr, H))
+    keep = svc.screened_keep(thr)
+    assert sorted(zip(keys[keep], snap.seq[keep], snap.dur[keep])) \
+        == sorted(zip(pat[bkeep], seq[bkeep], dur[bkeep]))
+
+    x = int(rng.integers(0, 30))
+    for smask, bmask in [
+        (svc.query_starts_with(x),
+         np.asarray(queries.starts_with(seq, x)) & msk),
+        (svc.query_ends_with(x, threshold=thr),
+         np.asarray(queries.ends_with(seq, x)) & bkeep),
+        (svc.query_min_duration(30),
+         np.asarray(queries.min_duration(dur, 30)) & msk),
+    ]:
+        assert sorted(zip(keys[smask], snap.seq[smask], snap.dur[smask])) \
+            == sorted(zip(pat[bmask], seq[bmask], dur[bmask]))
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("budget", [None, 40_000])
+def test_chaos_migration_equals_batch(n_shards, budget):
+    rng = np.random.default_rng(7_000 + 10 * n_shards + (budget or 0))
+    db = random_dbmart(rng, n_patients=int(rng.integers(5, 11)))
+    svc = ShardedStreamService(
+        n_shards=n_shards, tick_patients=int(rng.integers(1, 4)),
+        n_buckets_log2=H, budget_bytes=budget)
+    chaos_replay(db, svc, rng)
+    assert_matches_batch(svc, db, rng)
+
+
+def test_chaos_migration_equals_single_shard_stream():
+    """Byte-identical to single-shard streaming, not just to batch: the
+    same replay schedule with and without sharding+migration."""
+    rng = np.random.default_rng(55)
+    db = random_dbmart(rng, n_patients=9, max_events=14)
+    seed = 17
+    kw = dict(tick_patients=2, n_buckets_log2=H)
+    sh = ShardedStreamService(n_shards=4, **kw)
+    chaos_replay(db, sh, np.random.default_rng(seed))
+    single = StreamService(**kw)
+    replay(db, single, np.random.default_rng(seed))
+
+    snap, keys = sharded_triples(sh)
+    ssnap = single.snapshot()
+    p2k = {pid: k for k, pid in single.store.pids.items()}
+    skeys = np.asarray([p2k[int(p)] for p in ssnap.patient]
+                       if len(ssnap.patient) else [], np.int64)
+    assert sorted(zip(keys, snap.seq, snap.dur)) \
+        == sorted(zip(skeys, ssnap.seq, ssnap.dur))
+    assert (snap.counts == ssnap.counts).all()
+    thr = 2
+    keep, skeep = sh.screened_keep(thr), single.screened_keep(thr)
+    assert sorted(zip(keys[keep], snap.seq[keep])) \
+        == sorted(zip(skeys[skeep], ssnap.seq[skeep]))
+
+
+def test_chaos_migration_with_kernel_backend():
+    """The Pallas delta kernel mines migrated-in patients exactly (their
+    history restores through the spill path before the next delta slab)."""
+    rng = np.random.default_rng(23)
+    db = random_dbmart(rng, n_patients=6, max_events=12)
+    svc = ShardedStreamService(n_shards=2, tick_patients=2,
+                               n_buckets_log2=H, backend="kernel",
+                               interpret=True)
+    chaos_replay(db, svc, rng)
+    assert_matches_batch(svc, db, rng)
+
+
+def test_chaos_auto_rebalance_equals_batch():
+    """rebalance_every triggers migrations from inside tick(); the replay
+    stays exact and actually migrates on a skewed pinned placement."""
+    rng = np.random.default_rng(31)
+    db = random_dbmart(rng, n_patients=10, max_events=20)
+    router = ShardRouter(3, pinned={p: 0 for p in range(db.n_patients)})
+    svc = ShardedStreamService(
+        n_shards=3, router=router, tick_patients=2, n_buckets_log2=H,
+        rebalance_every=2, imbalance_threshold=1.1)
+    replay(db, svc, rng)
+    assert svc.migrations, "skewed placement never rebalanced"
+    assert_matches_batch(svc, db, rng)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_chaos_deep_sweep(n_shards):
+    """More schedules per shard count (slow tier: run with -m slow)."""
+    for case in range(4):
+        rng = np.random.default_rng(9_000 + 100 * n_shards + case)
+        db = random_dbmart(rng, n_patients=int(rng.integers(4, 14)))
+        svc = ShardedStreamService(
+            n_shards=n_shards, tick_patients=int(rng.integers(1, 5)),
+            n_buckets_log2=H,
+            budget_bytes=40_000 if case % 2 else None)
+        chaos_replay(db, svc, rng)
+        assert_matches_batch(svc, db, rng)
+
+
+@pytest.mark.slow
+@settings(max_examples=15)
+@given(data=st.data())
+def test_chaos_migration_hypothesis(data):
+    """Hypothesis drives the whole schedule: dbmart shape, chunk sizes,
+    tick/migrate/rebalance interleaving, shard count, eviction budget."""
+    n_shards = data.draw(st.sampled_from([1, 2, 4]), label="n_shards")
+    n_patients = data.draw(st.integers(2, 8), label="n_patients")
+    budget = data.draw(st.sampled_from([None, 40_000]), label="budget")
+    db = random_dbmart(np.random.default_rng(
+        data.draw(st.integers(0, 2**16), label="db_seed")),
+        n_patients=n_patients, max_events=10)
+    svc = ShardedStreamService(
+        n_shards=n_shards, n_buckets_log2=H, budget_bytes=budget,
+        tick_patients=data.draw(st.integers(1, 4), label="tick_patients"))
+    cursors = np.zeros(db.n_patients, np.int64)
+    alive = [p for p in range(db.n_patients) if db.nevents[p] > 0]
+    while alive:
+        i = data.draw(st.integers(0, len(alive) - 1))
+        p = alive[i]
+        lo = int(cursors[p])
+        hi = min(lo + data.draw(st.integers(1, 3)), int(db.nevents[p]))
+        svc.submit(p, db.date[p, lo:hi], db.phenx[p, lo:hi])
+        cursors[p] = hi
+        if hi == int(db.nevents[p]):
+            alive.remove(p)
+        op = data.draw(st.integers(0, 5))
+        if op == 0:
+            svc.tick()
+        elif op == 1:
+            svc.run()
+        elif op == 2 and svc.pids:
+            keys = sorted(svc.pids)
+            svc.migrate(keys[data.draw(st.integers(0, len(keys) - 1))],
+                        data.draw(st.integers(0, n_shards - 1)))
+        elif op == 3:
+            svc.rebalance(imbalance_threshold=1.25)
+    svc.run()
+    assert_matches_batch(svc, db, np.random.default_rng(0))
+
+
+# --- handoff mechanisms, one at a time -------------------------------------
+
+def test_migrate_moves_queued_deltas_in_order():
+    """Sticky-until-migrated: queued deltas follow the patient before any
+    tick, so nothing is ever mined against a partial history."""
+    svc = ShardedStreamService(n_shards=2, tick_patients=4, n_buckets_log2=H)
+    key = 0
+    src = svc.router.route(key)
+    svc.submit(key, [1, 2], [5, 6])
+    svc.submit(key, [3], [7])
+    svc.migrate(key, 1 - src)
+    assert not svc.shards[src].queue
+    assert [d.phenx.tolist() for d in svc.shards[1 - src].queue] \
+        == [[5, 6], [7]]
+    assert svc.router.route(key) == 1 - src
+    svc.run()
+    ph, dt = svc.shards[1 - src].store.history(key)
+    assert ph.tolist() == [5, 6, 7] and dt.tolist() == [1, 2, 3]
+
+
+def test_migrate_unknown_key_raises_and_same_shard_is_noop():
+    svc = ShardedStreamService(n_shards=2, n_buckets_log2=H)
+    with pytest.raises(KeyError):
+        svc.migrate("ghost", 1)
+    svc.submit(3, [1], [2])
+    svc.run()
+    home = svc.router.route(3)
+    svc.migrate(3, home)
+    assert svc.migrations == []
+    assert 3 in svc.shards[home].store.pids
+
+
+def test_migrate_out_of_range_dst_rejected_before_mutation():
+    """A bad dst (negative would silently index shards[-1]) must fail
+    before any state moves — queue, store, and router stay intact."""
+    svc = ShardedStreamService(n_shards=3, n_buckets_log2=H)
+    svc.submit(0, [1], [2])
+    svc.run()
+    svc.submit(0, [3], [4])            # leave a queued delta too
+    home = svc.router.route(0)
+    for bad in (-1, 3, 17):
+        with pytest.raises(ValueError):
+            svc.migrate(0, bad)
+    assert svc.router.route(0) == home
+    assert 0 in svc.shards[home].store.pids
+    assert len(svc.shards[home].queue) == 1 and svc.migrations == []
+    svc.run()
+    ph, dt = svc.shards[home].store.history(0)
+    assert ph.tolist() == [2, 4] and dt.tolist() == [1, 3]
+
+
+def test_migrate_spilled_patient_moves_host_copy():
+    """A patient evicted to host at the source migrates from the spill
+    slot; the destination restores it on the next touch."""
+    rng = np.random.default_rng(13)
+    db = random_dbmart(rng, n_patients=12, max_events=20)
+    svc = ShardedStreamService(n_shards=2, tick_patients=3,
+                               n_buckets_log2=H, budget_bytes=20_000)
+    replay(db, svc, rng)
+    spilled = [(s, k) for s, sv in enumerate(svc.shards)
+               for k in sv.store._spilled]
+    assert spilled, "budget never spilled anyone"
+    s, key = spilled[0]
+    svc.migrate(key, 1 - s)
+    assert key in svc.shards[1 - s].store._spilled
+    assert key not in svc.shards[s].store.pids
+    assert_matches_batch(svc, db, rng)
+
+
+def test_sketch_row_handoff_is_subtract_add_exact():
+    rng = np.random.default_rng(3)
+    src, dst = OnlineSupportSketch(H), OnlineSupportSketch(H)
+    seq = rng.integers(0, 1 << 40, (2, 9)).astype(np.int64)
+    mask = np.ones((2, 9), bool)
+    src.update([0, 1], seq, mask)
+    before = np.asarray(src.counts).copy()
+    ids = src.extract_row(0)
+    assert sorted(ids) == sorted(set(seq[0].tolist()))
+    dst.admit_row(5, ids)
+    # global table (the psum merge) is invariant under the transfer
+    assert (np.asarray(src.counts) + np.asarray(dst.counts) == before).all()
+    # source row is zeroed; destination row continues to dedupe correctly
+    assert src.n_distinct[0] == 0
+    novel = dst.update([5], seq[0][None, :3], np.ones((1, 3), bool))
+    assert novel == 0   # ids already in the migrated set
+
+
+def test_store_extract_shrinks_high_water_planes():
+    st_ = PatientStore(init_patients=2, init_events=8)
+    ph = np.arange(100, dtype=np.int32)
+    rows, _ = st_.admit(["big"])
+    st_.append(rows, ph[None], ph[None], np.asarray([100], np.int32))
+    for k in range(5):
+        r, _ = st_.admit([f"s{k}"])
+        st_.append(r, ph[None, :3], ph[None, :3], np.asarray([3], np.int32))
+    assert st_.max_events >= 100
+    cap_before = st_.max_events
+    pid, hph, hdt = st_.extract("big")
+    assert hph.tolist() == ph.tolist() and hdt.tolist() == ph.tolist()
+    # one doubling step released per call (true hysteresis: a ping-ponging
+    # patient costs O(log) retraces, not full-depth thrash)
+    assert st_.max_events < cap_before
+    for _ in range(6):
+        st_.shrink_to_fit()
+    assert st_.max_events <= 16   # converges to the survivors' extent
+    for k in range(5):            # survivors intact after the shrinks
+        gp, _ = st_.history(f"s{k}")
+        assert gp.tolist() == ph[:3].tolist()
+
+
+def test_store_pids_never_reused_after_extract():
+    st_ = PatientStore()
+    st_.admit(["a", "b"])
+    pid_a, *_ = st_.extract("a")
+    st_.admit(["c"])
+    assert st_.pids["c"] != pid_a
+    assert st_.pid_capacity == 3 and st_.n_patients == 2
+    # round-trip: extract -> admit_state assigns a fresh pid, spill format
+    pid_b, ph, dt = st_.extract("b")
+    pid_b2 = st_.admit_state("b", ph, dt)
+    assert pid_b2 not in (pid_a, pid_b)
+
+
+def test_rebalance_moves_load_off_hot_shard():
+    rng = np.random.default_rng(8)
+    db = random_dbmart(rng, n_patients=12, max_events=20)
+    router = ShardRouter(4, pinned={p: 0 for p in range(db.n_patients)})
+    svc = ShardedStreamService(n_shards=4, router=router, tick_patients=4,
+                               n_buckets_log2=H)
+    replay(db, svc, rng)
+    before = svc.shard_loads()
+    assert max(before) == sum(before)   # everything on shard 0
+    moves = svc.rebalance(imbalance_threshold=1.1)
+    after = svc.shard_loads()
+    assert moves and max(after) < max(before)
+    assert sum(after) == sum(before)    # load moved, not created/lost
+    assert_matches_batch(svc, db, rng)
