@@ -17,6 +17,10 @@
                      sticky routing vs load-triggered patient migration
                      (``--suite streaming_rebalance`` writes
                      BENCH_streaming_rebalance.json)
+  api_overhead    -> unified session façade (repro.api) vs hand-wired
+                     mine->flatten->screen; batch-path dispatch overhead
+                     must stay < 5% (``--suite api_overhead`` writes
+                     BENCH_api_overhead.json)
 
 An unknown ``--suite`` prints the available suites instead of failing
 opaquely.  Prints ``name,us_per_call,derived`` CSV rows.
@@ -108,12 +112,21 @@ def streaming_rebalance_bench(small=True, out_path=None):
     streaming.main_rebalance(small=small, json_path=out_path, backend="jnp")
 
 
+def api_overhead_bench(small=True, out_path=None):
+    from benchmarks import api_overhead
+
+    out_path = out_path or "BENCH_api_overhead.json"
+    api_overhead.main(small=small, json_path=out_path, backend="jnp")
+
+
 SUITES = {
     "streaming": ("streaming ingest (delta vs re-mine)", streaming_bench),
     "streaming_sharded": ("mesh-sharded streaming (shards vs single)",
                           streaming_sharded_bench),
     "streaming_rebalance": ("live shard rebalancing (sticky vs migrated)",
                             streaming_rebalance_bench),
+    "api_overhead": ("session façade vs hand-wired batch path",
+                     api_overhead_bench),
 }
 
 

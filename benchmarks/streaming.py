@@ -20,12 +20,12 @@ import time
 
 import numpy as np
 
+from repro.api import MiningConfig, MiningSession
 from repro.core import mining
 from repro.data import dbmart, synthea
 from repro.launch.mesh import make_data_mesh
 from repro.launch.stream import replay_waves
-from repro.stream.service import StreamService
-from repro.stream.shard import ShardedStreamService, ShardRouter
+from repro.stream.shard import ShardRouter
 
 
 def one_cohort(n_patients=300, avg_events=32, n_waves=8, tick_patients=16,
@@ -33,11 +33,15 @@ def one_cohort(n_patients=300, avg_events=32, n_waves=8, tick_patients=16,
     pats, dates, phx, _ = synthea.generate_cohort(
         n_patients=n_patients, avg_events=avg_events, seed=seed)
     db = dbmart.from_rows(pats, dates, phx)
-    svc = StreamService(tick_patients=tick_patients, backend=backend,
-                        n_buckets_log2=18)
+    # façade-configured session; the benchmark reads the engine's internals
+    # (store residency, per-tick stats) through session.service
+    session = MiningSession(MiningConfig(
+        tick_patients=tick_patients, backend=backend, n_buckets_log2=18,
+        screen="hash"))
 
     waves = []
-    for w in replay_waves(db, svc, n_waves, seed):
+    for w in replay_waves(db, session, n_waves, seed):
+        svc = session.service
         k0 = len(svc.stats)
         t0 = time.perf_counter()
         svc.run()
@@ -97,12 +101,16 @@ def sharded_cohort(n_patients=120, avg_events=24, n_waves=6,
     for n_shards in shard_counts:
         router = ShardRouter.balanced(
             list(range(db.n_patients)), np.asarray(db.nevents), n_shards)
-        svc = ShardedStreamService(
-            n_shards=n_shards, router=router, mesh=mesh,
-            tick_patients=tick_patients, backend=backend, n_buckets_log2=18)
+        # engine='sharded' override: the n_shards=1 row must still go
+        # through the sharded service (merged-table screen) for the sweep
+        session = MiningSession(MiningConfig(
+            engine="sharded", n_shards=n_shards, tick_patients=tick_patients,
+            backend=backend, n_buckets_log2=18, screen="hash"),
+            mesh=mesh, router=router)
         t0 = time.perf_counter()
-        for _ in replay_waves(db, svc, n_waves, seed):
-            svc.run()
+        for _ in replay_waves(db, session, n_waves, seed):
+            session.service.run()
+        svc = session.service
         ingest_s = time.perf_counter() - t0
         per_shard_s = [sum(t.wall_s for t in s.stats) for s in svc.shards]
         events = sum(t.n_events for t in svc.stats)
@@ -177,14 +185,16 @@ def rebalance_cohort(n_light=90, n_heavy=10, light_events=8,
     def one_run(rebalance: bool) -> dict:
         router = ShardRouter(n_shards,
                              pinned={p: 0 for p in range(n_heavy)})
-        svc = ShardedStreamService(
-            n_shards=n_shards, router=router,
+        session = MiningSession(MiningConfig(
+            engine="sharded", n_shards=n_shards,
             rebalance_every=rebalance_every if rebalance else None,
             imbalance_threshold=imbalance_threshold,
-            tick_patients=tick_patients, backend=backend, n_buckets_log2=18)
+            tick_patients=tick_patients, backend=backend, n_buckets_log2=18,
+            screen="hash"), router=router)
         t0 = time.perf_counter()
-        for _ in replay_waves(db, svc, n_waves, seed):
-            svc.run()
+        for _ in replay_waves(db, session, n_waves, seed):
+            session.service.run()
+        svc = session.service
         ingest_s = time.perf_counter() - t0
         busy = [sum(t.wall_s for t in s.stats) for s in svc.shards]
         events = sum(t.n_events for t in svc.stats)

@@ -1,18 +1,19 @@
-"""Vignette 1 — tSPM+ inside an MLHO-style ML workflow.
+"""Vignette 1 — tSPM+ inside an MLHO-style ML workflow, on the session API.
 
     PYTHONPATH=src python examples/mlho_integration.py
 
-Pipeline (mirrors the paper's first vignette): numeric conversion ->
-transitive mining -> sparsity screen -> MSMR (top-200 by support, JMI
-re-ranking) -> train a classifier on sequence features -> translate the
-most predictive sequences back to human-readable strings.
+Pipeline (the paper's first vignette): ``MiningSession.fit`` -> top-1000
+sequences by support -> ``SequenceFrame.to_features`` (patient x sequence
+matrix) -> JMI re-ranking (core.msmr) -> logistic regression -> translate
+the most predictive sequences back to human-readable strings.
 The task: predict long-COVID status from mined sequences.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mining, msmr, sparsity
+from repro.api import MiningConfig, MiningSession
+from repro.core import msmr
 from repro.data import dbmart, synthea
 
 
@@ -40,14 +41,9 @@ def main():
     db = dbmart.from_rows(pats, dates, phx)
     y = truth.long_covid.astype(np.float32)
 
-    # mine + screen
-    mined = mining.mine(db.phenx, db.date, db.nevents, backend="jnp")
-    seq, dur, pat, msk = mining.flatten(mined)
-    _, _, _, u_key, u_sup, _ = sparsity.support_counts(seq, pat, msk)
-
-    # MSMR: support screen (top-1000), then JMI against the label
-    feats = msmr.top_sequences(u_key, u_sup, k=1000)
-    fm = msmr.feature_matrix(seq, pat, msk, feats, n_patients=db.n_patients)
+    # mine + MSMR front half: one façade chain
+    frame = MiningSession(MiningConfig()).fit(db)
+    fm = frame.to_features(k=1000)
     sel = msmr.select_jmi(np.asarray(fm.x), y, k=32)
     x = jnp.asarray(np.asarray(fm.x)[:, sel])
     print(f"features: {fm.x.shape[1]} screened -> {x.shape[1]} after JMI")
@@ -58,7 +54,6 @@ def main():
     tr, te = idx[:320], idx[320:]
     w, b = train_logreg(x[tr], jnp.asarray(y[tr]))
     pred = np.asarray(jax.nn.sigmoid(x[te] @ w + b))
-    auc_num = 0
     pos = pred[y[te] == 1]
     neg = pred[y[te] == 0]
     if len(pos) and len(neg):
@@ -71,7 +66,7 @@ def main():
 
     # translate the most predictive sequences back (paper: human readable)
     w_np = np.asarray(w)
-    feats_np = np.asarray(feats)[sel]
+    feats_np = np.asarray(fm.feature_ids)[sel]
     print("\nmost predictive transitive sequences:")
     for i in np.argsort(-np.abs(w_np))[:6]:
         print(f"  {db.vocab.decode_sequence(int(feats_np[i])):55s} "

@@ -1,15 +1,17 @@
-"""Vignette 2 — identify Post-COVID-19 patients per the WHO definition.
+"""Vignette 2 — identify Post-COVID-19 patients, on the session API.
 
     PYTHONPATH=src python examples/postcovid.py
 
-Transitive sequences + durations implement the definition directly: a PCC
-symptom starts after infection, persists >= 2 months (duration spread of
-covid->symptom sequences), is new-onset (no symptom->covid sequence), and
-is not explained by a competing cause (cohort-correlated anchor).
+``MiningSession.fit`` mines the cohort (any engine — the planner picks);
+``SequenceFrame.arrays()`` hands the canonical flat corpus to the WHO-rule
+identifier (core.postcovid): a PCC symptom starts after infection, persists
+>= 2 months (duration spread of covid->symptom sequences), is new-onset,
+and is not explained by a competing cause.
 """
 import numpy as np
 
-from repro.core import mining, postcovid
+from repro.api import MiningConfig, MiningSession
+from repro.core import postcovid
 from repro.data import dbmart, synthea
 
 
@@ -17,8 +19,7 @@ def main():
     pats, dates, phx, truth = synthea.generate_cohort(
         n_patients=240, avg_events=44, seed=7)
     db = dbmart.from_rows(pats, dates, phx)
-    mined = mining.mine(db.phenx, db.date, db.nevents, backend="jnp")
-    seq, dur, pat, msk = mining.flatten(mined)
+    seq, dur, pat, msk = MiningSession(MiningConfig()).fit(db).arrays()
 
     cfg = postcovid.PostCovidConfig(
         covid_id=db.vocab.phenx_index[synthea.COVID])

@@ -1,51 +1,34 @@
-"""Quickstart: mine transitive sequences from a synthetic clinical cohort.
+"""Quickstart: mine transitive sequences through the unified session API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Mirrors the R-package happy path: alphanumeric dbmart -> numeric encoding
--> transitive mining (with durations) -> sparsity screen -> translate the
-top sequences back to human-readable form.
+The R-package happy path on the façade (``repro.api``): alphanumeric dbmart
+-> ``MiningSession.fit`` (the planner picks the engine; print
+``session.plan(db)`` to see why, or force one with
+``MiningConfig(engine=...)``) -> chainable screen / top-k -> human-readable
+sequences.  The hand-wired mine->flatten->screen->decode version of this
+script lives in git history; the façade is the documented path.
 """
-import numpy as np
-
-from repro.core import mining, msmr, sparsity
+from repro.api import MiningConfig, MiningSession
 from repro.data import dbmart, synthea
 
 
 def main():
-    # 1. a synthetic Synthea-style cohort (the paper ships one with the pkg)
     pats, dates, phx, _ = synthea.generate_cohort(
         n_patients=128, avg_events=32, seed=42)
     db = dbmart.from_rows(pats, dates, phx)
     print(f"dbmart: {db.n_patients} patients, {db.total_events} events, "
           f"{db.vocab.n_phenx} unique phenX")
 
-    # 2. transitive sequences + durations (n(n-1)/2 per patient)
-    mined = mining.mine(db.phenx, db.date, db.nevents, backend="jnp")
-    print(f"mined {int(mined.n_mined):,} transitive sequences "
-          f"(closed form: {int(mining.count_sequences(db.nevents)):,})")
+    session = MiningSession(MiningConfig(threshold=5))
+    print(session.plan(db))
+    frame = session.fit(db)
+    print(f"mined {len(frame):,} transitive sequences")
+    print(f"screened at support>=5: kept {frame.screen().n_kept:,}")
 
-    # 3. sparsity screening (paper-faithful sort-based variant)
-    seq, dur, pat, msk = mining.flatten(mined)
-    scr = sparsity.screen_sorted(seq, dur, pat, msk, threshold=5)
-    print(f"screened at support>=5: kept {int(scr.n_kept):,}")
-
-    # 4. top sequences by distinct-patient support, decoded to strings
-    _, _, _, u_key, u_sup, n_u = sparsity.support_counts(seq, pat, msk)
-    top = msmr.top_sequences(u_key, u_sup, k=8)
     print("\nmost supported transitive sequences:")
-    u_key = np.asarray(u_key)
-    u_sup = np.asarray(u_sup)
-    from repro.core.encoding import SENTINEL
-
-    order = np.argsort(-u_sup)
-    shown = 0
-    for i in order:
-        if shown >= 8 or u_sup[i] <= 0 or u_key[i] == SENTINEL:
-            break
-        print(f"  {db.vocab.decode_sequence(int(u_key[i])):55s} "
-              f"support={int(u_sup[i])}")
-        shown += 1
+    for d in frame.top_k(8).decode():
+        print(f"  {d.text:55s} support={d.support}")
 
 
 if __name__ == "__main__":

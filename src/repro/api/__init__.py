@@ -1,0 +1,37 @@
+"""Unified tSPM+ session API — one façade over every execution engine.
+
+The paper ships its C++ core behind an R-package API "for an easy
+integration into already existing machine learning workflows"; this package
+is that surface for the repro.  Four execution engines exist underneath
+(in-memory batch, chunked, file-based spill, streaming, sharded streaming),
+each with its own calling convention — the façade folds them behind three
+objects:
+
+  * :class:`MiningConfig` — every knob in one frozen dataclass (codec,
+    duration fusing, screen mode, backend, memory budget, shard count,
+    rebalance hysteresis);
+  * :class:`MiningSession` — ``fit(dbmart)`` for batch input,
+    ``submit(...)`` / ``tick()`` for incremental input, and ``plan()`` to
+    inspect (or override, via ``MiningConfig.engine``) which engine the
+    planner picked;
+  * :class:`SequenceFrame` — the unified result: flat (seq, dur, patient)
+    arrays in a canonical order with chainable, lazily-composed mask
+    methods (``.screen``, ``.starts_with``, ``.transitive_ends_with``,
+    ``.top_k``, ``.to_features``, ``.decode``, ...).
+
+Conformance invariant (tests/test_api.py): for a fixed cohort,
+``MiningSession.fit`` output — kept sequences, supports, decoded strings —
+is byte-identical across every engine the planner can select.
+
+Quickstart::
+
+    from repro.api import MiningConfig, MiningSession
+
+    session = MiningSession(MiningConfig(threshold=5))
+    frame = session.fit(db)                       # planner picks the engine
+    for d in frame.screen().top_k(8).decode():
+        print(d.text, d.support)
+"""
+from repro.api.config import ENGINES, MiningConfig, Plan  # noqa: F401
+from repro.api.frame import Decoded, Result, SequenceFrame  # noqa: F401
+from repro.api.session import MiningSession  # noqa: F401

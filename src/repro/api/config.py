@@ -1,0 +1,113 @@
+"""MiningConfig + Plan: the façade's declarative knobs and planner output.
+
+One frozen dataclass carries everything the four execution layers used to
+take as scattered keyword arguments — encoding (codec, duration fusing),
+screening (threshold, sorted vs hash), execution (backend, byte budgets),
+and streaming/sharding (shard count, router, rebalance hysteresis).  A
+config is plain data: runtime resources (a mesh, a pre-built router) are
+passed to :class:`~repro.api.session.MiningSession` instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.encoding import CODECS
+
+#: Engines the planner can select (and ``MiningConfig.engine`` can force):
+#:   batch   — one in-memory mine of the whole cohort (core.mining)
+#:   chunked — adaptive patient chunks under ``budget_bytes`` (core.chunking)
+#:   files   — chunked with per-chunk .npz spill + merged count table
+#:   stream  — incremental delta mining, one shard (stream.service)
+#:   sharded — patient-sharded streaming over ``n_shards`` (stream.shard)
+ENGINES = ("batch", "chunked", "files", "stream", "sharded")
+
+SCREEN_MODES = ("sorted", "hash")
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningConfig:
+    """Every mining knob in one place (see module docstring)."""
+
+    # --- encoding ---------------------------------------------------------
+    codec: str = "bit"              # 'bit' | 'paper' (encoding.pack)
+    fuse_duration: bool = False     # fuse bucketed duration into the id
+    bucket_days: int = 30           # duration bucket width (days)
+
+    # --- screening --------------------------------------------------------
+    threshold: int | None = None    # default support threshold for .screen()
+    screen: str = "sorted"          # 'sorted' (exact) | 'hash' (one-sided)
+    n_buckets_log2: int = 20        # hash-screen table size (2^H buckets)
+
+    # --- execution --------------------------------------------------------
+    backend: str = "jnp"            # 'jnp' | 'kernel' | 'auto' (mining.mine)
+    budget_bytes: int | None = None  # mining working-set byte budget
+    spill_bytes: int | None = None  # host corpus size that triggers file spill
+    spill_dir: str | None = None    # where the file engine spills (tmp if None)
+    engine: str | None = None       # force one of ENGINES (None = planner)
+
+    # --- streaming / sharding ---------------------------------------------
+    tick_patients: int = 16         # patient slots per streaming tick
+    max_slot_events: int = 512      # flood cap per slot (stream.service)
+    n_shards: int = 1               # patient shards (>1 selects 'sharded')
+    router: str = "hash"            # 'hash' | 'balance' (LPT, needs nevents)
+    rebalance_every: int | None = None   # auto-rebalance period (ticks)
+    imbalance_threshold: float = 1.5     # hot-shard trigger (x mean load)
+    min_gain: float = 0.05               # migration hysteresis (x mean load)
+
+    def __post_init__(self):
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown codec {self.codec!r}; one of {CODECS}")
+        if self.screen not in SCREEN_MODES:
+            raise ValueError(
+                f"unknown screen mode {self.screen!r}; one of {SCREEN_MODES}")
+        if self.engine is not None and self.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}; one of {ENGINES}")
+        if self.router not in ("hash", "balance"):
+            raise ValueError(f"unknown router {self.router!r}")
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+
+    def replace(self, **kw) -> "MiningConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _fmt_bytes(n: int | None) -> str:
+    if n is None:
+        return "unbounded"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if n < 1024 or unit == "TiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{n} B"
+        n /= 1024
+    return f"{n} B"
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """What the planner decided and why — print it, or override it by
+    re-running with ``MiningConfig(engine=...)``."""
+
+    engine: str
+    reason: str
+    working_set_bytes: int = 0
+    budget_bytes: int | None = None
+    corpus_bytes: int = 0
+    n_chunks: int = 1
+    n_shards: int = 1
+    incremental: bool = False
+
+    def __str__(self) -> str:
+        lines = [
+            f"MiningPlan(engine={self.engine})",
+            f"  reason      : {self.reason}",
+            f"  working set : {_fmt_bytes(self.working_set_bytes)}"
+            f" (budget {_fmt_bytes(self.budget_bytes)})",
+            f"  flat corpus : {_fmt_bytes(self.corpus_bytes)}",
+        ]
+        if self.n_chunks > 1:
+            lines.append(f"  chunks      : {self.n_chunks}")
+        if self.n_shards > 1:
+            lines.append(f"  shards      : {self.n_shards}")
+        if self.incremental:
+            lines.append("  input       : incremental (submit/tick)")
+        return "\n".join(lines)

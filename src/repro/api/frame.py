@@ -1,0 +1,345 @@
+"""SequenceFrame: the façade's unified mining result.
+
+Every engine — batch, chunked, file-based, streaming, sharded — lands in
+the same place: a flat (seq, dur, patient) corpus in a *canonical order*
+(lexicographic by sequence id, then patient, then duration), with padding
+rows already dropped.  That canonicalization is what makes the conformance
+guarantee byte-identical rather than merely set-equal: two engines that
+mine the same pairs produce the same arrays, whatever order they touched
+patients in.
+
+Mask methods are **chainable and lazily composed**: each returns a new
+frame sharing the corpus, with one more predicate appended; nothing is
+evaluated until a terminal (``collect``, ``unique``, ``decode``,
+``to_features``, ``arrays``, ``n_kept``) forces the composed keep mask.
+Predicates see the keep mask accumulated so far, so order matters where it
+should — ``.screen(5).transitive_ends_with(x)`` builds its end-set table
+from screened sequences only.
+
+Support is the paper's *distinct-patient* support, computed exactly from
+the canonical corpus; ``screen`` applies it directly (mode 'sorted') or
+via the engines' shared hash-bucket table (mode 'hash', one-sided error —
+both modes are engine-invariant).  Duration-fused ids are first-class: the
+frame knows ``fuse_duration`` and routes every unpack-based helper through
+the fuse-aware path (core/queries), so ``starts_with`` on a fused corpus
+reads phenX codes, not duration bits.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import msmr, queries, sparsity
+from repro.core.encoding import Vocab
+
+
+class Result(NamedTuple):
+    """Kept rows in canonical order + their distinct-patient support."""
+
+    seq: np.ndarray      # [K] int64
+    dur: np.ndarray      # [K] int32
+    patient: np.ndarray  # [K] int32
+    support: np.ndarray  # [K] int32
+
+
+class Decoded(NamedTuple):
+    seq_id: int
+    text: str
+    support: int
+
+
+class _Corpus:
+    """Shared immutable canonical corpus + lazily-filled caches.
+
+    Chained frames all point at one ``_Corpus``, so support and the hash
+    table are computed at most once per mining run, not per mask method.
+    Construction materializes the engine's flat arrays to host (the same
+    work the hand-wired flow's ``np.asarray`` does) but defers the
+    padding compaction + canonical lexsort until a mask or terminal first
+    needs row access — ``fit`` alone costs what ``mine`` + ``flatten``
+    cost (benchmarks/api_overhead.py holds this under 5%).
+    """
+
+    __slots__ = ("n_buckets_log2", "_raw", "_n_rows",
+                 "_seq", "_dur", "_patient",
+                 "_counts", "_support", "_pair_first")
+
+    def __init__(self, seq, dur, patient, mask, counts, n_buckets_log2):
+        seq = np.asarray(seq, np.int64).reshape(-1)
+        dur = np.asarray(dur, np.int32).reshape(-1)
+        patient = np.asarray(patient, np.int32).reshape(-1)
+        if mask is not None:
+            mask = np.asarray(mask, bool).reshape(-1)
+        self._raw = (seq, dur, patient, mask)
+        self._n_rows = len(seq) if mask is None else None  # lazy when masked
+        self._seq = self._dur = self._patient = None
+        self.n_buckets_log2 = n_buckets_log2
+        self._counts = None if counts is None else np.asarray(counts, np.int32)
+        self._support = None
+        self._pair_first = None
+
+    def _canonicalize(self) -> None:
+        if self._seq is not None:
+            return
+        seq, dur, patient, mask = self._raw
+        if mask is not None:
+            seq, dur, patient = seq[mask], dur[mask], patient[mask]
+        order = np.lexsort((dur, patient, seq))
+        self._seq, self._dur, self._patient = \
+            seq[order], dur[order], patient[order]
+        self._raw = None
+
+    @property
+    def seq(self) -> np.ndarray:
+        self._canonicalize()
+        return self._seq
+
+    @property
+    def dur(self) -> np.ndarray:
+        self._canonicalize()
+        return self._dur
+
+    @property
+    def patient(self) -> np.ndarray:
+        self._canonicalize()
+        return self._patient
+
+    def __len__(self) -> int:
+        if self._n_rows is None:
+            if self._seq is not None:
+                self._n_rows = len(self._seq)
+            else:
+                self._n_rows = int(self._raw[3].sum())
+        return self._n_rows
+
+    def pair_first(self) -> np.ndarray:
+        """First-occurrence flags of each distinct (seq, patient) pair —
+        the per-patient dedup of the paper's support semantics."""
+        if self._pair_first is None:
+            if len(self.seq) == 0:
+                self._pair_first = np.zeros(0, bool)
+            else:
+                new_seq = np.concatenate(
+                    [[True], self.seq[1:] != self.seq[:-1]])
+                self._pair_first = new_seq | np.concatenate(
+                    [[True], self.patient[1:] != self.patient[:-1]])
+        return self._pair_first
+
+    def support(self) -> np.ndarray:
+        """Exact distinct-patient support aligned to every corpus row."""
+        if self._support is None:
+            n = len(self.seq)
+            if n == 0:
+                self._support = np.zeros(0, np.int32)
+            else:
+                new_seq = np.concatenate(
+                    [[True], self.seq[1:] != self.seq[:-1]])
+                seg = np.cumsum(new_seq) - 1
+                per_seq = np.bincount(
+                    seg[self.pair_first()], minlength=seg[-1] + 1)
+                self._support = per_seq[seg].astype(np.int32)
+        return self._support
+
+    def counts(self) -> np.ndarray:
+        """Hash-bucket support table.  Engines hand over their native table
+        (batch screen counts, spill-file table, streaming sketch, psum-merged
+        shard tables — all exactly equal, property-tested); frames built
+        without one derive it here from the canonical corpus."""
+        if self._counts is None:
+            ids = self.seq[self.pair_first()]
+            h = np.asarray(sparsity.hash_bucket(ids, self.n_buckets_log2))
+            counts = np.zeros(1 << self.n_buckets_log2, np.int32)
+            np.add.at(counts, h, 1)
+            self._counts = counts
+        return self._counts
+
+
+def _rank_by_support(ids: np.ndarray, sup: np.ndarray,
+                     k: int | None = None) -> np.ndarray:
+    """Indices of ``ids`` ordered most-supported first, ties on the smaller
+    id — the one deterministic ranking behind ``top_k`` / ``decode`` /
+    ``to_features``, so every engine picks the same set."""
+    order = np.lexsort((ids, -sup))
+    return order if k is None else order[:max(k, 0)]
+
+
+_Op = tuple[str, Callable]
+
+
+class SequenceFrame:
+    """Chainable view over a mined corpus (see module docstring)."""
+
+    def __init__(self, seq, dur, patient, mask=None, *, vocab: Vocab | None = None,
+                 codec: str = "bit", fuse_duration: bool = False,
+                 bucket_days: int = 30, n_patients: int | None = None,
+                 counts=None, n_buckets_log2: int = 20,
+                 screen_mode: str = "sorted", threshold: int | None = None,
+                 _corpus: _Corpus | None = None, _ops: tuple[_Op, ...] = ()):
+        self._corpus = _corpus if _corpus is not None else _Corpus(
+            seq, dur, patient, mask, counts, n_buckets_log2)
+        self.vocab = vocab
+        self.codec = codec
+        self.fuse_duration = fuse_duration
+        self.bucket_days = bucket_days
+        self._n_patients = int(n_patients) if n_patients is not None else None
+        self.screen_mode = screen_mode
+        self.threshold = threshold
+        self._ops = _ops
+        self._keep_cache: np.ndarray | None = None
+
+    @property
+    def n_patients(self) -> int:
+        if self._n_patients is None:
+            c = self._corpus
+            self._n_patients = int(c.patient.max()) + 1 if len(c) else 0
+        return self._n_patients
+
+    # --- chaining machinery -------------------------------------------------
+    def _chain(self, op: _Op) -> "SequenceFrame":
+        return SequenceFrame(
+            None, None, None, vocab=self.vocab, codec=self.codec,
+            fuse_duration=self.fuse_duration, bucket_days=self.bucket_days,
+            n_patients=self._n_patients,
+            n_buckets_log2=self._corpus.n_buckets_log2,
+            screen_mode=self.screen_mode, threshold=self.threshold,
+            _corpus=self._corpus, _ops=self._ops + (op,))
+
+    def keep_mask(self) -> np.ndarray:
+        """Force the lazily-composed predicate chain; cached per frame."""
+        if self._keep_cache is None:
+            keep = np.ones(len(self._corpus), bool)
+            for _, fn in self._ops:
+                keep = fn(self, keep)
+            self._keep_cache = keep
+        return self._keep_cache
+
+    def __repr__(self) -> str:
+        ops = ".".join(name for name, _ in self._ops) or "(all)"
+        pats = "?" if self._n_patients is None else self._n_patients
+        return (f"SequenceFrame({len(self._corpus):,} rows, "
+                f"{pats} patients, ops={ops})")
+
+    def __len__(self) -> int:
+        return len(self._corpus)
+
+    # --- chainable masks ----------------------------------------------------
+    def screen(self, threshold: int | None = None) -> "SequenceFrame":
+        """Sparsity screen at distinct-patient ``threshold`` (default: the
+        config's).  Mode 'sorted' uses exact support; 'hash' the engines'
+        shared bucket table (one-sided: collisions only ever over-keep)."""
+        thr = self.threshold if threshold is None else threshold
+        if thr is None:
+            raise ValueError("no threshold: pass one or set MiningConfig.threshold")
+
+        def op(fr: "SequenceFrame", keep: np.ndarray) -> np.ndarray:
+            if fr.screen_mode == "hash":
+                return np.asarray(sparsity.screen_hash_from_counts(
+                    fr._corpus.seq, keep, fr._corpus.counts(), thr,
+                    fr._corpus.n_buckets_log2))
+            return keep & (fr._corpus.support() >= thr)
+
+        return self._chain((f"screen({thr})", op))
+
+    def starts_with(self, phenx_id: int) -> "SequenceFrame":
+        def op(fr, keep):
+            return keep & np.asarray(queries.starts_with(
+                fr._corpus.seq, phenx_id, fr.codec, fused=fr.fuse_duration))
+        return self._chain((f"starts_with({phenx_id})", op))
+
+    def ends_with(self, phenx_id: int) -> "SequenceFrame":
+        def op(fr, keep):
+            return keep & np.asarray(queries.ends_with(
+                fr._corpus.seq, phenx_id, fr.codec, fused=fr.fuse_duration))
+        return self._chain((f"ends_with({phenx_id})", op))
+
+    def min_duration(self, days: int) -> "SequenceFrame":
+        def op(fr, keep):
+            return keep & np.asarray(queries.min_duration(fr._corpus.dur, days))
+        return self._chain((f"min_duration({days})", op))
+
+    def transitive_ends_with(self, start_phenx_id: int) -> "SequenceFrame":
+        """Rows whose end phenX ends any *currently-kept* sequence starting
+        with ``start_phenx_id`` (the paper's combined helper; chain it after
+        ``screen`` to restrict the table to supported sequences)."""
+        def op(fr, keep):
+            return keep & np.asarray(queries.transitive_ends_with(
+                fr._corpus.seq, keep, start_phenx_id, fr.codec,
+                fused=fr.fuse_duration))
+        return self._chain((f"transitive_ends_with({start_phenx_id})", op))
+
+    def top_k(self, k: int) -> "SequenceFrame":
+        """Keep only the ``k`` most-supported distinct sequence ids among
+        currently-kept rows (ties break on the smaller id — deterministic,
+        so every engine picks the same set)."""
+        def op(fr, keep):
+            ids = fr._corpus.seq[keep]
+            if len(ids) == 0:
+                return keep
+            sup = fr._corpus.support()[keep]
+            u, idx = np.unique(ids, return_index=True)
+            allowed = np.sort(u[_rank_by_support(u, sup[idx], k)])
+            if len(allowed) == 0:
+                return np.zeros_like(keep)
+            pos = np.clip(np.searchsorted(allowed, fr._corpus.seq),
+                          0, len(allowed) - 1)
+            return keep & (allowed[pos] == fr._corpus.seq)
+        return self._chain((f"top_k({k})", op))
+
+    # --- terminals ----------------------------------------------------------
+    @property
+    def n_kept(self) -> int:
+        return int(self.keep_mask().sum())
+
+    def collect(self) -> Result:
+        keep = self.keep_mask()
+        c = self._corpus
+        return Result(c.seq[keep], c.dur[keep], c.patient[keep],
+                      c.support()[keep])
+
+    def unique(self) -> tuple[np.ndarray, np.ndarray]:
+        """(distinct kept ids sorted ascending, their supports)."""
+        keep = self.keep_mask()
+        ids = self._corpus.seq[keep]
+        u, idx = np.unique(ids, return_index=True)
+        return u, self._corpus.support()[keep][idx]
+
+    def decode(self, limit: int | None = None) -> list[Decoded]:
+        """Kept distinct sequences as human-readable strings, most-supported
+        first (ties on the smaller id).  Needs a vocab on the frame."""
+        if self.vocab is None:
+            raise ValueError("frame has no vocab; build the session from a "
+                             "DBMart with one to decode sequences")
+        ids, sup = self.unique()
+        order = _rank_by_support(ids, sup, limit)
+        return [Decoded(int(ids[i]),
+                        self.vocab.decode_sequence(
+                            int(ids[i]), self.codec, fused=self.fuse_duration),
+                        int(sup[i]))
+                for i in order]
+
+    def to_features(self, k: int | None = None,
+                    feature_ids=None) -> msmr.FeatureMatrix:
+        """Patient x sequence binary feature matrix (the MSMR front half):
+        features are the kept distinct ids (optionally the ``k`` most
+        supported), presence is computed over kept rows only."""
+        if feature_ids is None:
+            ids, sup = self.unique()
+            if k is not None:
+                ids = ids[np.sort(_rank_by_support(ids, sup, k))]
+            feature_ids = ids
+        feature_ids = np.asarray(feature_ids, np.int64).reshape(-1)
+        if len(feature_ids) == 0 or self.n_patients == 0:
+            return msmr.FeatureMatrix(
+                jnp.zeros((self.n_patients, len(feature_ids)), jnp.float32),
+                jnp.asarray(feature_ids), jnp.asarray(len(feature_ids)))
+        return msmr.feature_matrix(
+            self._corpus.seq, self._corpus.patient, self.keep_mask(),
+            jnp.asarray(feature_ids), n_patients=self.n_patients)
+
+    def arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(seq, dur, patient, keep) over the full canonical corpus — the
+        legacy hand-wired interface (core.postcovid et al. take these)."""
+        c = self._corpus
+        return c.seq, c.dur, c.patient, self.keep_mask()

@@ -1,0 +1,80 @@
+"""Execution planner: pick the engine from cohort size vs budget vs arrival.
+
+The R package "split[s] the dbmart in chunks with an adaptive size to fit
+the available memory limitations" and falls back to a file-based mode; the
+streaming subsystem added incremental arrival and sharding.  The planner
+encodes that decision tree once, using the same cost model everywhere
+(``chunking.BYTES_PER_PAIR`` over padded pair slabs):
+
+  * incremental input          -> 'stream' (or 'sharded' when n_shards > 1);
+  * batch input, n_shards > 1  -> 'sharded' (the config asked for shards);
+  * working set fits budget    -> 'batch';
+  * flat corpus > spill_bytes  -> 'files' (host RAM is the next wall);
+  * otherwise                  -> 'chunked'.
+
+``MiningConfig.engine`` short-circuits everything — the plan records that
+it was forced.  Every engine yields byte-identical results (the conformance
+suite), so the choice is purely a resource decision.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api.config import MiningConfig, Plan
+from repro.core import chunking
+
+# flat corpus row: 8B seq + 4B dur + 4B patient + 1B mask
+_BYTES_PER_ROW = 17
+
+
+def _working_set(nevents: np.ndarray, config: MiningConfig,
+                 pad_multiple: int = 8) -> int:
+    """One-shot mining working set: the whole cohort as a single chunk."""
+    e = int(np.max(nevents, initial=1))
+    e = max(-(-e // pad_multiple) * pad_multiple, 1)
+    factor = 1.0 if config.backend == "kernel" else 0.5  # dense vs triangular
+    return int(len(nevents) * e * e * chunking.BYTES_PER_PAIR * factor)
+
+
+def _corpus_bytes(nevents: np.ndarray) -> int:
+    n = nevents.astype(np.int64)
+    return int(np.sum(n * (n - 1) // 2)) * _BYTES_PER_ROW
+
+
+def make_plan(config: MiningConfig, nevents=None,
+              incremental: bool = False) -> Plan:
+    """Decide the engine for a cohort (``nevents`` per patient) or an
+    incremental session (``incremental=True``, no cohort known up front)."""
+    nevents = (np.zeros(0, np.int64) if nevents is None
+               else np.asarray(nevents, np.int64))
+    ws = _working_set(nevents, config) if len(nevents) else 0
+    corpus = _corpus_bytes(nevents) if len(nevents) else 0
+    budget = config.budget_bytes
+    n_chunks = (len(chunking.plan_chunks(nevents, budget))
+                if budget is not None and len(nevents) else 1)
+    common = dict(working_set_bytes=ws, budget_bytes=budget,
+                  corpus_bytes=corpus, n_chunks=n_chunks,
+                  n_shards=config.n_shards, incremental=incremental)
+
+    if config.engine is not None:
+        return Plan(config.engine,
+                    "forced by MiningConfig.engine override", **common)
+    if incremental:
+        if config.n_shards > 1:
+            return Plan("sharded", f"incremental input over "
+                        f"{config.n_shards} patient shards", **common)
+        return Plan("stream", "incremental input (submit/tick)", **common)
+    if config.n_shards > 1:
+        return Plan("sharded", f"config requests {config.n_shards} patient "
+                    "shards; batch input replayed through them", **common)
+    # spill is a host-RAM decision, independent of the device working set:
+    # a cohort can fit the mining budget chunk-by-chunk and still produce a
+    # flat corpus too big to hold in memory
+    if config.spill_bytes is not None and corpus > config.spill_bytes:
+        return Plan("files", "flat corpus exceeds spill_bytes; chunks spill "
+                    "to disk and screen via the merged count table", **common)
+    if budget is None or ws <= budget:
+        return Plan("batch", "mining working set fits the byte budget",
+                    **common)
+    return Plan("chunked", "working set exceeds budget_bytes; mining "
+                f"adaptively in {n_chunks} patient chunks", **common)

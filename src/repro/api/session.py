@@ -1,0 +1,228 @@
+"""MiningSession: config-driven dispatch over every execution engine.
+
+``fit(dbmart)`` runs the planner (``plan()`` shows the decision; a
+``MiningConfig.engine`` override forces it) and dispatches:
+
+  * ``batch``   — one in-memory mine (core.mining) + flatten;
+  * ``chunked`` — adaptive patient chunks under ``budget_bytes``
+    (core.chunking.mine_chunked);
+  * ``files``   — chunk spill to .npz + merged bucket-count table
+    (mine_to_files / load_files);
+  * ``stream``  — the cohort replayed through a StreamService;
+  * ``sharded`` — replayed through a ShardedStreamService over
+    ``n_shards`` (hash or LPT-balanced router, optional mesh psum merge).
+
+``submit(key, dates, phenx)`` / ``tick()`` feed the same session
+incrementally (engine 'stream' or 'sharded' by ``n_shards``); ``tick``
+ingests one wave and returns the live frame.  All paths land in a
+:class:`~repro.api.frame.SequenceFrame`, and all are byte-identical on the
+same cohort (tests/test_api.py) — the engine is purely a resource choice.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.api import planner
+from repro.api.config import MiningConfig, Plan
+from repro.api.frame import SequenceFrame
+from repro.core import chunking, mining, sparsity
+from repro.core.encoding import Vocab
+from repro.data.dbmart import DBMart
+from repro.stream.service import StreamService
+from repro.stream.shard import ShardedStreamService, ShardRouter
+
+
+class MiningSession:
+    """One mining session: a config, a planner, and a result frame.
+
+    ``mesh`` (a ('data',)-axis mesh) and a pre-built ``router`` are runtime
+    resources for the sharded engine; ``vocab`` decodes incremental frames
+    (fit takes it from the DBMart).  Keyword overrides fork the config:
+    ``MiningSession(threshold=5)`` == ``MiningSession(MiningConfig(threshold=5))``.
+    """
+
+    def __init__(self, config: MiningConfig | None = None, *, mesh=None,
+                 router: ShardRouter | None = None, vocab: Vocab | None = None,
+                 **overrides):
+        config = config if config is not None else MiningConfig()
+        self.config = config.replace(**overrides) if overrides else config
+        self.mesh = mesh
+        self.router = router
+        self.vocab = vocab
+        self.service: StreamService | ShardedStreamService | None = None
+        self.last_plan: Plan | None = None
+        self.last_frame: SequenceFrame | None = None
+
+    # --- planning -----------------------------------------------------------
+    def plan(self, db: DBMart | None = None) -> Plan:
+        """The execution plan: for ``db`` if given, else the plan of the
+        last ``fit`` / the live incremental session."""
+        if db is not None:
+            return planner.make_plan(self.config, db.nevents)
+        if self.last_plan is not None:
+            return self.last_plan
+        return planner.make_plan(self.config, incremental=True)
+
+    # --- batch input --------------------------------------------------------
+    def fit(self, db: DBMart) -> SequenceFrame:
+        """Mine a whole dbmart through the planned engine."""
+        if self.service is not None:
+            raise RuntimeError("session is already streaming (submit/tick); "
+                               "use a fresh session for batch fit")
+        plan = planner.make_plan(self.config, db.nevents)
+        self.last_plan = plan
+        fit = getattr(self, f"_fit_{plan.engine}")
+        self.last_frame = fit(db)
+        return self.last_frame
+
+    def _frame(self, seq, dur, patient, mask=None, counts=None,
+               vocab=None, n_patients=None) -> SequenceFrame:
+        c = self.config
+        return SequenceFrame(
+            seq, dur, patient, mask, vocab=vocab, codec=c.codec,
+            fuse_duration=c.fuse_duration, bucket_days=c.bucket_days,
+            n_patients=n_patients, counts=counts,
+            n_buckets_log2=c.n_buckets_log2, screen_mode=c.screen,
+            threshold=c.threshold)
+
+    def _fit_batch(self, db: DBMart) -> SequenceFrame:
+        c = self.config
+        mined = mining.mine(db.phenx, db.date, db.nevents, codec=c.codec,
+                            fuse_duration=c.fuse_duration,
+                            bucket_days=c.bucket_days, backend=c.backend)
+        counts = (sparsity.local_bucket_counts(
+            mined.seq, mined.mask, c.n_buckets_log2)
+            if c.screen == "hash" else None)
+        seq, dur, pat, msk = mining.flatten(mined)
+        return self._frame(seq, dur, pat, msk, counts=counts,
+                           vocab=db.vocab, n_patients=db.n_patients)
+
+    def _fit_chunked(self, db: DBMart) -> SequenceFrame:
+        c = self.config
+        out = chunking.mine_chunked(
+            db, budget_bytes=c.budget_bytes or (1 << 28), codec=c.codec,
+            backend=c.backend, n_buckets_log2=c.n_buckets_log2,
+            fuse_duration=c.fuse_duration, bucket_days=c.bucket_days,
+            with_counts=c.screen == "hash")
+        return self._frame(out["seq"], out["dur"], out["patient"],
+                           out["mask"], counts=out.get("counts"),
+                           vocab=db.vocab, n_patients=db.n_patients)
+
+    def _fit_files(self, db: DBMart) -> SequenceFrame:
+        c = self.config
+        out_dir = c.spill_dir or tempfile.mkdtemp(prefix="tspm_spill_")
+        try:
+            chunking.mine_to_files(
+                db, out_dir, budget_bytes=c.budget_bytes or (1 << 28),
+                codec=c.codec, backend=c.backend,
+                n_buckets_log2=c.n_buckets_log2,
+                fuse_duration=c.fuse_duration, bucket_days=c.bucket_days)
+            out = chunking.load_files(out_dir)
+        finally:
+            if c.spill_dir is None:   # we made the dir; don't leak a corpus
+                shutil.rmtree(out_dir, ignore_errors=True)
+        return self._frame(out["seq"], out["dur"], out["patient"],
+                           counts=out["counts"], vocab=db.vocab,
+                           n_patients=db.n_patients)
+
+    def _replay(self, db: DBMart, svc) -> None:
+        for p in range(db.n_patients):
+            n = int(db.nevents[p])
+            if n:
+                svc.submit(p, db.date[p, :n], db.phenx[p, :n])
+        svc.run()
+
+    def _fit_stream(self, db: DBMart) -> SequenceFrame:
+        svc = self._make_service(sharded=False)
+        self._replay(db, svc)
+        return self._snap_frame(svc, vocab=db.vocab,
+                                n_patients=db.n_patients)
+
+    def _fit_sharded(self, db: DBMart) -> SequenceFrame:
+        router = self.router
+        if router is None and self.config.router == "balance":
+            router = ShardRouter.balanced(
+                list(range(db.n_patients)), np.asarray(db.nevents),
+                self.config.n_shards)
+        svc = self._make_service(sharded=True, router=router)
+        self._replay(db, svc)
+        return self._snap_frame(svc, vocab=db.vocab,
+                                n_patients=db.n_patients)
+
+    # --- incremental input --------------------------------------------------
+    def submit(self, key, dates, phenx) -> None:
+        """Queue one patient delta; ingest with ``tick()`` / ``run()``."""
+        self._ensure_service().submit(key, dates, phenx)
+
+    def tick(self) -> SequenceFrame:
+        """Ingest one wave (every shard with queued work) and return the
+        live frame over the updated corpus."""
+        self._ensure_service().tick()
+        return self.frame()
+
+    def run(self) -> SequenceFrame:
+        """Drain the queue, then return the live frame."""
+        self._ensure_service().run()
+        return self.frame()
+
+    def frame(self) -> SequenceFrame:
+        """The current result: the live streaming corpus, or the last
+        ``fit`` result for a batch session."""
+        if self.service is None:
+            if self.last_frame is not None:
+                return self.last_frame
+            raise RuntimeError("nothing mined yet: fit() a dbmart or "
+                               "submit() deltas first")
+        return self._snap_frame(self.service, vocab=self.vocab)
+
+    def _ensure_service(self):
+        if self.service is None:
+            if self.last_frame is not None:
+                raise RuntimeError(
+                    "session already ran a batch fit; use a fresh session "
+                    "for incremental submit/tick")
+            plan = planner.make_plan(self.config, incremental=True)
+            if plan.engine not in ("stream", "sharded"):
+                raise ValueError(
+                    f"engine {plan.engine!r} cannot ingest incrementally; "
+                    "leave MiningConfig.engine unset or pick stream/sharded")
+            self.last_plan = plan
+            self.service = self._make_service(sharded=plan.engine == "sharded",
+                                              router=self.router)
+        return self.service
+
+    def _make_service(self, sharded: bool, router: ShardRouter | None = None):
+        c = self.config
+        kw = dict(tick_patients=c.tick_patients, codec=c.codec,
+                  backend=c.backend, n_buckets_log2=c.n_buckets_log2,
+                  budget_bytes=c.budget_bytes, fuse_duration=c.fuse_duration,
+                  bucket_days=c.bucket_days, max_slot_events=c.max_slot_events)
+        if not sharded:
+            return StreamService(**kw)
+        return ShardedStreamService(
+            n_shards=c.n_shards, router=router, mesh=self.mesh,
+            rebalance_every=c.rebalance_every,
+            imbalance_threshold=c.imbalance_threshold,
+            min_gain=c.min_gain, **kw)
+
+    def _snap_frame(self, svc, vocab=None, n_patients=None) -> SequenceFrame:
+        snap = svc.snapshot()
+        if isinstance(svc, ShardedStreamService):
+            p2k = svc.pid_to_key()
+        else:
+            p2k = {pid: k for k, pid in svc.store.pids.items()}
+        if p2k and all(isinstance(k, (int, np.integer))
+                       for k in p2k.values()):
+            # patient column = original integer keys, via a pid lut (pids
+            # are dense admission-order ints, possibly with retired holes)
+            lut = np.full(max(p2k) + 1, -1, np.int64)
+            for pid, key in p2k.items():
+                lut[pid] = key
+            patient = lut[snap.patient].astype(np.int32)
+        else:
+            patient = snap.patient    # non-int keys: keep dense pids
+        return self._frame(snap.seq, snap.dur, patient, counts=snap.counts,
+                           vocab=vocab, n_patients=n_patients)

@@ -71,11 +71,13 @@ def plan_chunks(nevents: np.ndarray, budget_bytes: int,
 
 def mine_chunked(db: DBMart, budget_bytes: int = 1 << 28, threshold: int | None = None,
                  codec: str = "bit", backend: str = "jnp",
-                 n_buckets_log2: int = 22) -> dict:
+                 n_buckets_log2: int = 22, fuse_duration: bool = False,
+                 bucket_days: int = 30, with_counts: bool = False) -> dict:
     """In-memory chunked mining (+ optional global hash screen).
 
     Returns flat numpy arrays {seq, dur, patient, mask} over all chunks
-    (concatenated; masks mark real pairs), plus 'keep' when screening.
+    (concatenated; masks mark real pairs), plus 'keep' when screening and
+    'counts' (the merged bucket table) when screening or ``with_counts``.
     """
     chunks = plan_chunks(np.asarray(db.nevents), budget_bytes)
     parts = []
@@ -83,8 +85,9 @@ def mine_chunked(db: DBMart, budget_bytes: int = 1 << 28, threshold: int | None 
     for ch in chunks:
         sub = db.slice_patients(ch.start, ch.stop, ch.max_events)
         mined = mining.mine(sub.phenx, sub.date, sub.nevents, codec=codec,
-                            backend=backend)
-        if threshold is not None:
+                            fuse_duration=fuse_duration,
+                            bucket_days=bucket_days, backend=backend)
+        if threshold is not None or with_counts:
             c = sparsity.local_bucket_counts(mined.seq, mined.mask, n_buckets_log2)
             counts = c if counts is None else sparsity.merge_bucket_counts(counts, c)
         seq, dur, pat, msk = mining.flatten(mined, patient_offset=ch.start)
@@ -96,6 +99,8 @@ def mine_chunked(db: DBMart, budget_bytes: int = 1 << 28, threshold: int | None 
         "patient": np.concatenate([p[2] for p in parts]),
         "mask": np.concatenate([p[3] for p in parts]),
     }
+    if counts is not None:
+        out["counts"] = np.asarray(counts)
     if threshold is not None:
         keep = sparsity.screen_hash_from_counts(
             out["seq"], out["mask"], np.asarray(counts), threshold, n_buckets_log2)
@@ -105,7 +110,8 @@ def mine_chunked(db: DBMart, budget_bytes: int = 1 << 28, threshold: int | None 
 
 def mine_to_files(db: DBMart, out_dir: str, budget_bytes: int = 1 << 28,
                   codec: str = "bit", backend: str = "jnp",
-                  n_buckets_log2: int = 22) -> list[str]:
+                  n_buckets_log2: int = 22, fuse_duration: bool = False,
+                  bucket_days: int = 30) -> list[str]:
     """File-based mode: one .npz per chunk + a merged bucket-count table."""
     os.makedirs(out_dir, exist_ok=True)
     for name in os.listdir(out_dir):   # stale spill from a previous cohort
@@ -117,7 +123,8 @@ def mine_to_files(db: DBMart, out_dir: str, budget_bytes: int = 1 << 28,
     for k, ch in enumerate(chunks):
         sub = db.slice_patients(ch.start, ch.stop, ch.max_events)
         mined = mining.mine(sub.phenx, sub.date, sub.nevents, codec=codec,
-                            backend=backend)
+                            fuse_duration=fuse_duration,
+                            bucket_days=bucket_days, backend=backend)
         c = sparsity.local_bucket_counts(mined.seq, mined.mask, n_buckets_log2)
         counts = c if counts is None else sparsity.merge_bucket_counts(counts, c)
         seq, dur, pat, msk = mining.flatten(mined, patient_offset=ch.start)
@@ -129,6 +136,27 @@ def mine_to_files(db: DBMart, out_dir: str, budget_bytes: int = 1 << 28,
         paths.append(path)
     np.save(os.path.join(out_dir, "bucket_counts.npy"), np.asarray(counts))
     return paths
+
+
+def load_files(out_dir: str) -> dict:
+    """Read a spill directory back unscreened: flat compacted {seq, dur,
+    patient} arrays (every row real — spills drop padding) + the merged
+    'counts' table.  The screening twin of this loader is
+    :func:`screen_files`; the API façade's file engine uses this one so a
+    threshold can still be applied (and re-applied) lazily."""
+    counts = np.load(os.path.join(out_dir, "bucket_counts.npy"))
+    seq, dur, pat = [], [], []
+    for name in sorted(os.listdir(out_dir)):
+        if not name.startswith("chunk_"):
+            continue
+        z = np.load(os.path.join(out_dir, name))
+        seq.append(z["seq"])
+        dur.append(z["dur"])
+        pat.append(z["patient"])
+    cat = lambda parts, dt: (np.concatenate(parts) if parts
+                             else np.zeros(0, dt))
+    return {"seq": cat(seq, np.int64), "dur": cat(dur, np.int32),
+            "patient": cat(pat, np.int32), "counts": counts}
 
 
 def screen_files(out_dir: str, threshold: int,

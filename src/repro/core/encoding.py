@@ -111,10 +111,20 @@ class Vocab:
     def decode_phenx(self, pid: int) -> str:
         return self.phenx_strings[int(pid)]
 
-    def decode_sequence(self, seq_id: int, codec: str = "bit") -> str:
-        """Human-readable 'start -> end' (paper: reversible representation)."""
-        s, e = unpack(np.int64(seq_id), codec)
-        return f"{self.phenx_strings[int(s)]} -> {self.phenx_strings[int(e)]}"
+    def decode_sequence(self, seq_id: int, codec: str = "bit",
+                        fused: bool = False) -> str:
+        """Human-readable 'start -> end' (paper: reversible representation).
+
+        ``fused`` strips a fused duration bucket first and appends it as
+        ``[bucket k]`` — decoding a fused id raw would index garbage."""
+        seq_id = np.int64(seq_id)
+        bucket = None
+        if fused:
+            seq_id, b = split_duration(seq_id)
+            bucket = int(b)
+        s, e = unpack(seq_id, codec)
+        text = f"{self.phenx_strings[int(s)]} -> {self.phenx_strings[int(e)]}"
+        return text if bucket is None else f"{text} [bucket {bucket}]"
 
 
 def build_vocab(patients: Sequence, phenx: Sequence[str]) -> Vocab:

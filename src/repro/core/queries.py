@@ -5,6 +5,10 @@ start phenX, end phenX or specified minimum durations.  Another function
 combines these ... all sequences that end with a phenX which is an end phenX
 of all sequences with a given start phenX" — the transitive expansion used
 by the Post-COVID vignette.  All masks compose with the mining mask.
+
+Duration-fused ids (``encoding.fuse_duration``) carry the bucketed duration
+in the low ``DUR_BITS``; every helper takes ``fused=True`` to strip it
+before unpacking — unpacking a fused id raw would read garbage phenX codes.
 """
 from __future__ import annotations
 
@@ -15,13 +19,22 @@ from repro.core import encoding
 from repro.core.encoding import SENTINEL
 
 
-def starts_with(seq, phenx_id, codec: str = "bit"):
-    s, _ = encoding.unpack(seq, codec)
+def unpack_seq(seq, codec: str = "bit", fused: bool = False):
+    """(start, end) phenX of a sequence id, stripping a fused duration
+    bucket first when ``fused``."""
+    seq = jnp.asarray(seq, jnp.int64)
+    if fused:
+        seq, _ = encoding.split_duration(seq)
+    return encoding.unpack(seq, codec)
+
+
+def starts_with(seq, phenx_id, codec: str = "bit", fused: bool = False):
+    s, _ = unpack_seq(seq, codec, fused)
     return s == jnp.int32(phenx_id)
 
 
-def ends_with(seq, phenx_id, codec: str = "bit"):
-    _, e = encoding.unpack(seq, codec)
+def ends_with(seq, phenx_id, codec: str = "bit", fused: bool = False):
+    _, e = unpack_seq(seq, codec, fused)
     return e == jnp.int32(phenx_id)
 
 
@@ -36,12 +49,13 @@ def _membership(values, table_sorted):
     return table_sorted[idx] == values
 
 
-def end_set(seq, mask, start_phenx_id, codec: str = "bit", max_set: int | None = None):
+def end_set(seq, mask, start_phenx_id, codec: str = "bit", max_set: int | None = None,
+            fused: bool = False):
     """Sorted, sentinel-padded set of end-phenX over sequences starting with
     ``start_phenx_id``.  ``max_set`` bounds the static output size."""
     seq = jnp.asarray(seq, jnp.int64).reshape(-1)
     mask = jnp.asarray(mask, bool).reshape(-1)
-    s, e = encoding.unpack(seq, codec)
+    s, e = unpack_seq(seq, codec, fused)
     sel = mask & (s == jnp.int32(start_phenx_id))
     ends = jnp.where(sel, e.astype(jnp.int64), SENTINEL)
     ends = jnp.sort(ends)
@@ -53,11 +67,11 @@ def end_set(seq, mask, start_phenx_id, codec: str = "bit", max_set: int | None =
 
 
 def transitive_ends_with(seq, mask, start_phenx_id, codec: str = "bit",
-                         max_set: int | None = None):
+                         max_set: int | None = None, fused: bool = False):
     """Mask of sequences whose END phenX is an end of any sequence that
     STARTS with ``start_phenx_id`` (the paper's combined helper)."""
-    table = end_set(seq, mask, start_phenx_id, codec, max_set)
-    _, e = encoding.unpack(seq, codec)
+    table = end_set(seq, mask, start_phenx_id, codec, max_set, fused)
+    _, e = unpack_seq(seq, codec, fused)
     return _membership(e.astype(jnp.int64), table) & jnp.asarray(mask, bool)
 
 

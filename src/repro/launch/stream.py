@@ -3,8 +3,9 @@
   PYTHONPATH=src python -m repro.launch.stream --patients 200 --waves 8
 
 Generates a Synthea-style cohort, replays it wave-by-wave through the
-streaming service (data/serving analogue of the engine's wave scheduler),
-and prints ingest throughput plus sample snapshot queries.
+unified session API (``repro.api.MiningSession`` — the planner picks the
+stream or sharded engine from the config), and prints ingest throughput
+plus sample chainable-frame queries.
 """
 from __future__ import annotations
 
@@ -13,14 +14,15 @@ import time
 
 import numpy as np
 
+from repro.api import MiningConfig, MiningSession
 from repro.data import dbmart, synthea
-from repro.stream.service import StreamService
 from repro.stream.shard import ShardedStreamService, ShardRouter
 
 
-def replay_waves(db, svc: StreamService, n_waves: int, seed: int = 0):
+def replay_waves(db, svc, n_waves: int, seed: int = 0):
     """Split each patient's history into ~n_waves chronological deltas and
-    interleave them (wave-major), mimicking encounter-by-encounter arrival."""
+    interleave them (wave-major), mimicking encounter-by-encounter arrival.
+    ``svc`` is anything with ``submit`` (a service or a MiningSession)."""
     rng = np.random.default_rng(seed)
     cuts = []
     for p in range(db.n_patients):
@@ -61,6 +63,10 @@ def main(argv=None):
     ap.add_argument("--imbalance-threshold", type=float, default=1.5,
                     help="rebalance when the hottest shard's resident "
                          "pair cost exceeds this multiple of the mean")
+    ap.add_argument("--min-gain", type=float, default=0.05,
+                    help="migration hysteresis: skip moves that lower the "
+                         "hot shard's load by less than this fraction of "
+                         "the mean (prevents patient ping-pong)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.rebalance_every and args.shards <= 1:
@@ -70,26 +76,33 @@ def main(argv=None):
     pats, dates, phx, _ = synthea.generate_cohort(
         n_patients=args.patients, avg_events=args.avg_events, seed=args.seed)
     db = dbmart.from_rows(pats, dates, phx)
-    kw = dict(tick_patients=args.tick_patients, backend=args.backend,
-              n_buckets_log2=args.buckets_log2,
-              budget_bytes=(args.budget_mb << 20) or None)
+
+    config = MiningConfig(
+        threshold=args.threshold, screen="hash", backend=args.backend,
+        n_buckets_log2=args.buckets_log2, tick_patients=args.tick_patients,
+        budget_bytes=(args.budget_mb << 20) or None,
+        n_shards=args.shards, router=args.router,
+        rebalance_every=args.rebalance_every or None,
+        imbalance_threshold=args.imbalance_threshold,
+        min_gain=args.min_gain)
+    mesh = None
+    router = None
     if args.shards > 1:
         from repro.launch.mesh import make_data_mesh
 
-        router = (ShardRouter.balanced(list(range(db.n_patients)),
-                                       db.nevents, args.shards)
-                  if args.router == "balance" else ShardRouter(args.shards))
-        svc = ShardedStreamService(
-            n_shards=args.shards, router=router, mesh=make_data_mesh(),
-            rebalance_every=args.rebalance_every or None,
-            imbalance_threshold=args.imbalance_threshold, **kw)
-    else:
-        svc = StreamService(**kw)
+        mesh = make_data_mesh()
+        if args.router == "balance":
+            router = ShardRouter.balanced(list(range(db.n_patients)),
+                                          db.nevents, args.shards)
+    session = MiningSession(config, mesh=mesh, router=router,
+                            vocab=db.vocab)
+    print(session.plan())
 
     def _status():
         # cheap counters only: a snapshot() here would concat + psum-merge
         # inside the timed loop and skew the reported ingest throughput
-        if args.shards > 1:
+        svc = session.service
+        if isinstance(svc, ShardedStreamService):
             corpus = sum(len(c[0]) for s in svc.shards for c in s._corpus)
             return (f"corpus={corpus:,} resident=" +
                     "/".join(str(len(s.store.rows)) for s in svc.shards))
@@ -97,10 +110,11 @@ def main(argv=None):
                 f"resident={len(svc.store.rows)}")
 
     t0 = time.perf_counter()
-    for w in replay_waves(db, svc, args.waves, args.seed):
-        svc.run()
+    for w in replay_waves(db, session, args.waves, args.seed):
+        session.service.run()
         print(f"wave {w}: {_status()}")
     dt = time.perf_counter() - t0
+    svc = session.service
     ev = sum(s.n_events for s in svc.stats)
     pairs = sum(s.n_pairs for s in svc.stats)
     print(f"ingested {ev:,} events / {pairs:,} pairs over "
@@ -110,13 +124,14 @@ def main(argv=None):
         print(f"migrations={len(svc.migrations)} shard_load_mb=" +
               "/".join(f"{b / (1 << 20):.1f}" for b in loads))
 
+    frame = session.frame()
     covid = db.vocab.phenx_index[synthea.COVID]
-    m = svc.query_starts_with(covid, threshold=args.threshold)
+    n = frame.starts_with(covid).screen().n_kept
     print(f"sequences starting with COVID-19 (support>={args.threshold}): "
-          f"{int(m.sum()):,}")
-    m = svc.query_min_duration(60, threshold=args.threshold)
-    print(f"sequences spanning >=60 days (screened): {int(m.sum()):,}")
-    return svc
+          f"{n:,}")
+    n = frame.min_duration(60).screen().n_kept
+    print(f"sequences spanning >=60 days (screened): {n:,}")
+    return session
 
 
 if __name__ == "__main__":

@@ -83,8 +83,9 @@ class SnapshotQueries:
     """Snapshot query surface shared by the single- and sharded-shard
     services: core/queries masks over ``snapshot()`` composed with the
     ``screened_keep`` hash-screen mask, exactly as on the batch path.
-    Hosts need ``snapshot()``, ``screened_keep(threshold, snap)`` and
-    ``self.codec``."""
+    Hosts need ``snapshot()``, ``screened_keep(threshold, snap)``,
+    ``self.codec`` and ``self.fuse_duration`` (fused snapshot ids carry
+    the bucket in the low bits; unpacking them raw reads garbage)."""
 
     def _base(self, threshold: int | None) -> tuple[Snapshot, np.ndarray]:
         snap = self.snapshot()
@@ -95,12 +96,14 @@ class SnapshotQueries:
     def query_starts_with(self, phenx_id: int, threshold: int | None = None):
         snap, keep = self._base(threshold)
         return np.asarray(queries_lib.starts_with(
-            snap.seq, phenx_id, self.codec)) & keep
+            snap.seq, phenx_id, self.codec,
+            fused=self.fuse_duration)) & keep
 
     def query_ends_with(self, phenx_id: int, threshold: int | None = None):
         snap, keep = self._base(threshold)
         return np.asarray(queries_lib.ends_with(
-            snap.seq, phenx_id, self.codec)) & keep
+            snap.seq, phenx_id, self.codec,
+            fused=self.fuse_duration)) & keep
 
     def query_min_duration(self, days: int, threshold: int | None = None):
         snap, keep = self._base(threshold)

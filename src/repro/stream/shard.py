@@ -122,7 +122,8 @@ class ShardedStreamService(SnapshotQueries):
 
     def __init__(self, n_shards: int = 1, router: ShardRouter | None = None,
                  mesh=None, rebalance_every: int | None = None,
-                 imbalance_threshold: float = 1.5, **service_kwargs):
+                 imbalance_threshold: float = 1.5, min_gain: float = 0.05,
+                 **service_kwargs):
         if router is not None and router.n_shards != n_shards:
             raise ValueError(f"router covers {router.n_shards} shards, "
                              f"service has {n_shards}")
@@ -130,9 +131,11 @@ class ShardedStreamService(SnapshotQueries):
         self.mesh = mesh
         self.rebalance_every = rebalance_every
         self.imbalance_threshold = imbalance_threshold
+        self.min_gain = min_gain
         self.shards = [StreamService(**service_kwargs)
                        for _ in range(n_shards)]
         self.codec = self.shards[0].codec
+        self.fuse_duration = self.shards[0].fuse_duration
         self.n_buckets_log2 = self.shards[0].sketch.n_buckets_log2
         self.pids: dict = {}        # key -> global pid (first-submit order)
         self.migrations: list[tuple] = []   # (key, src, dst) history
@@ -221,14 +224,23 @@ class ShardedStreamService(SnapshotQueries):
                 for svc in self.shards]
 
     def rebalance(self, imbalance_threshold: float | None = None,
-                  max_moves: int | None = None) -> list[tuple]:
+                  max_moves: int | None = None,
+                  min_gain: float | None = None) -> list[tuple]:
         """Greedy LPT rebalancing: while the hottest shard's load exceeds
         ``imbalance_threshold`` x the mean, migrate its costliest patient
         that still lowers the maximum to the coldest shard.  Every move
         strictly decreases the load spread (sum of squares), so this
-        terminates; returns the (key, src, dst) moves made."""
+        terminates; returns the (key, src, dst) moves made.
+
+        ``min_gain`` is the migration-cost hysteresis: a handoff pays host
+        copies plus a shape-change retrace at the destination, so a move is
+        only worth it when it lowers ``max(hot, cold)`` by more than
+        ``min_gain`` x the mean load.  A borderline patient whose move
+        would barely dent the imbalance stays put instead of ping-ponging
+        between two near-equal shards on alternating rebalance passes."""
         thr = (self.imbalance_threshold if imbalance_threshold is None
                else imbalance_threshold)
+        gain_floor = self.min_gain if min_gain is None else min_gain
         costs = [self._patient_costs(svc) for svc in self.shards]
         loads = [sum(c.values()) for c in costs]
         mean = sum(loads) / len(loads)
@@ -239,7 +251,9 @@ class ShardedStreamService(SnapshotQueries):
             if loads[hot] <= thr * mean or loads[hot] == 0:
                 break
             cands = [(c, k) for k, c in costs[hot].items()
-                     if loads[cold] + c < loads[hot]]
+                     if loads[cold] + c < loads[hot]
+                     and loads[hot] - max(loads[hot] - c, loads[cold] + c)
+                     > gain_floor * mean]
             if not cands:
                 break
             c, key = max(cands, key=lambda t: t[0])

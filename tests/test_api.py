@@ -1,0 +1,335 @@
+"""Unified session API: conformance, planner, and frame semantics.
+
+The façade's headline guarantee: for a fixed cohort,
+``MiningSession.fit`` output — kept sequences, durations, patients,
+supports, decoded strings — is **byte-identical** across every engine the
+planner can select (batch, chunked, file-based, streaming n_shards=1,
+sharded n_shards=4), in both screen modes, with and without duration
+fusing.  Plus: the planner is inspectable/overridable, chained frame masks
+match the hand-wired core flows, and incremental submit/tick converges to
+the batch fit.
+"""
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.api import ENGINES, MiningConfig, MiningSession
+from repro.core import mining, msmr, queries, sparsity
+from repro.data import dbmart, synthea
+from tests.conftest import random_dbmart
+
+H = 12   # small hash table: collisions happen, all engines must agree anyway
+
+
+def fit_engine(engine, db, tmp_path=None, **cfg_kw):
+    kw = dict(engine=engine, n_buckets_log2=H, budget_bytes=48 << 10,
+              tick_patients=3)
+    kw.update(cfg_kw)
+    if engine == "sharded":
+        kw.setdefault("n_shards", 4)
+    if engine == "files" and tmp_path is not None:
+        kw.setdefault("spill_dir", str(tmp_path / f"spill_{engine}"))
+    return MiningSession(MiningConfig(**kw)).fit(db)
+
+
+def assert_frames_identical(frames: dict, decode=False):
+    base_name, base = next(iter(frames.items()))
+    br = base.screen().collect()
+    for name, frame in frames.items():
+        r = frame.screen().collect()
+        for field, a, b in zip(br._fields, br, r):
+            assert a.dtype == b.dtype, (name, field)
+            assert a.tobytes() == b.tobytes(), (name, field, base_name)
+        if decode:
+            assert [tuple(d) for d in frame.screen().decode()] \
+                == [tuple(d) for d in base.screen().decode()], name
+
+
+@pytest.mark.parametrize("screen", ["sorted", "hash"])
+def test_conformance_all_engines(tmp_path, screen):
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=32, avg_events=14, seed=21)
+    db = dbmart.from_rows(pats, dates, phx)
+    frames = {e: fit_engine(e, db, tmp_path, threshold=3, screen=screen)
+              for e in ENGINES}
+    assert_frames_identical(frames, decode=True)
+    # unscreened corpora are identical too (not just the kept prefix)
+    for e, f in frames.items():
+        seq, dur, pat, _ = f.arrays()
+        bseq, bdur, bpat, _ = frames["batch"].arrays()
+        assert seq.tobytes() == bseq.tobytes(), e
+        assert dur.tobytes() == bdur.tobytes(), e
+        assert pat.tobytes() == bpat.tobytes(), e
+
+
+def test_conformance_fused_duration(tmp_path):
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=24, avg_events=12, seed=3)
+    db = dbmart.from_rows(pats, dates, phx)
+    frames = {e: fit_engine(e, db, tmp_path, threshold=2, screen="hash",
+                            fuse_duration=True)
+              for e in ENGINES}
+    assert_frames_identical(frames, decode=True)
+    # fuse-aware queries on the fused corpus match the unfused corpus
+    plain = fit_engine("batch", db, threshold=2)
+    x = int(np.asarray(db.phenx)[0, 0])
+    for f in frames.values():
+        assert f.starts_with(x).n_kept == plain.starts_with(x).n_kept
+        assert f.ends_with(x).n_kept == plain.ends_with(x).n_kept
+
+
+@pytest.mark.parametrize("case", range(4))
+def test_conformance_random_dbmarts(tmp_path, case):
+    rng = np.random.default_rng(500 + case)
+    db = random_dbmart(rng)
+    thr = int(rng.integers(1, 4))
+    frames = {e: fit_engine(e, db, tmp_path, threshold=thr,
+                            screen=("hash", "sorted")[case % 2],
+                            router=("hash", "balance")[case % 2],
+                            n_shards=4 if e == "sharded" else 1)
+              for e in ENGINES}
+    assert_frames_identical(frames)
+
+
+@given(st.integers(0, 5000))
+def test_conformance_property(s):
+    rng = np.random.default_rng(s)
+    db = random_dbmart(rng, n_patients=int(rng.integers(1, 8)),
+                       max_events=int(rng.integers(2, 12)))
+    thr = int(rng.integers(1, 4))
+    screen = ("sorted", "hash")[int(rng.integers(2))]
+    engines = ("batch", "chunked", "stream", "sharded")
+    frames = {e: fit_engine(e, db, threshold=thr, screen=screen,
+                            budget_bytes=int(rng.integers(8, 64)) << 10)
+              for e in engines}
+    assert_frames_identical(frames)
+
+
+# --- planner -----------------------------------------------------------------
+def test_plan_inspectable_and_overridable():
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=32, avg_events=16, seed=1)
+    db = dbmart.from_rows(pats, dates, phx)
+    sess = MiningSession(MiningConfig())
+    assert sess.plan(db).engine == "batch"
+
+    small = MiningConfig(budget_bytes=16 << 10)
+    p = MiningSession(small).plan(db)
+    assert p.engine == "chunked" and p.n_chunks > 1
+    assert "chunked" in str(p) and "chunks" in str(p)
+
+    p = MiningSession(small.replace(spill_bytes=1)).plan(db)
+    assert p.engine == "files"
+    # spill is a host-RAM decision: it must fire without a device budget too
+    p = MiningSession(MiningConfig(spill_bytes=1)).plan(db)
+    assert p.engine == "files"
+
+    p = MiningSession(MiningConfig(n_shards=2)).plan(db)
+    assert p.engine == "sharded"
+
+    p = MiningSession(MiningConfig(engine="stream")).plan(db)
+    assert p.engine == "stream" and "override" in p.reason
+
+    # incremental sessions plan stream/sharded
+    assert MiningSession(MiningConfig()).plan().engine == "stream"
+    assert MiningSession(MiningConfig(n_shards=4)).plan().engine == "sharded"
+
+    # fit records the plan it executed
+    sess = MiningSession(small)
+    sess.fit(db)
+    assert sess.plan().engine == "chunked"
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        MiningConfig(codec="nope")
+    with pytest.raises(ValueError):
+        MiningConfig(screen="exact")
+    with pytest.raises(ValueError):
+        MiningConfig(engine="gpu")
+    with pytest.raises(ValueError):
+        MiningConfig(n_shards=0)
+
+
+# --- frame semantics vs hand-wired core flows --------------------------------
+def _handwired(db):
+    mined = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    return tuple(np.asarray(x) for x in mining.flatten(mined))
+
+
+def _triples(seq, dur, pat, keep):
+    return sorted(zip(seq[keep].tolist(), dur[keep].tolist(),
+                      pat[keep].tolist()))
+
+
+def test_frame_masks_match_handwired():
+    rng = np.random.default_rng(11)
+    db = random_dbmart(rng, n_patients=10, max_events=16)
+    seq, dur, pat, msk = _handwired(db)
+    frame = MiningSession(MiningConfig(threshold=2)).fit(db)
+    x = int(np.asarray(db.phenx)[0, 0])
+
+    got = frame.starts_with(x).collect()
+    ref = np.asarray(queries.starts_with(seq, x)) & msk
+    assert _triples(got.seq, got.dur, got.patient,
+                    np.ones(len(got.seq), bool)) == _triples(seq, dur, pat, ref)
+
+    got = frame.min_duration(30).collect()
+    ref = np.asarray(queries.min_duration(dur, 30)) & msk
+    assert _triples(got.seq, got.dur, got.patient,
+                    np.ones(len(got.seq), bool)) == _triples(seq, dur, pat, ref)
+
+    got = frame.transitive_ends_with(x).collect()
+    ref = np.asarray(queries.transitive_ends_with(seq, msk, x)) & msk
+    assert _triples(got.seq, got.dur, got.patient,
+                    np.ones(len(got.seq), bool)) == _triples(seq, dur, pat, ref)
+
+    # exact screen == screen_sorted's kept multiset
+    scr = sparsity.screen_sorted(seq, dur, pat, msk, 2)
+    got = frame.screen().collect()
+    n = int(scr.n_kept)
+    assert _triples(got.seq, got.dur, got.patient,
+                    np.ones(len(got.seq), bool)) \
+        == sorted(zip(np.asarray(scr.seq)[:n].tolist(),
+                      np.asarray(scr.dur)[:n].tolist(),
+                      np.asarray(scr.patient)[:n].tolist()))
+    # support column matches support_counts' per-sequence table
+    _, _, _, u_key, u_sup, _ = sparsity.support_counts(seq, pat, msk)
+    table = dict(zip(np.asarray(u_key).tolist(), np.asarray(u_sup).tolist()))
+    assert all(table[s] == sup
+               for s, sup in zip(got.seq.tolist(), got.support.tolist()))
+
+
+def test_frame_top_k_and_features():
+    rng = np.random.default_rng(7)
+    db = random_dbmart(rng, n_patients=12, max_events=16)
+    frame = MiningSession(MiningConfig()).fit(db)
+    ids, sup = frame.unique()
+    k = min(5, len(ids))
+    top = frame.top_k(k)
+    tids, tsup = top.unique()
+    assert len(tids) == k
+    # every kept id's support >= any dropped id's support
+    dropped = np.setdiff1d(ids, tids)
+    if len(dropped) and len(tids):
+        drop_sup = sup[np.searchsorted(ids, dropped)]
+        assert tsup.min() >= drop_sup.max()
+
+    # degenerate k never crashes: empty result, empty feature matrix
+    assert frame.top_k(0).n_kept == 0
+    assert np.asarray(frame.to_features(k=0).x).shape[1] == 0
+
+    fm = frame.to_features()
+    seq, dur, pat, msk = _handwired(db)
+    ref = msmr.feature_matrix(seq, pat, msk, np.sort(ids),
+                              n_patients=db.n_patients)
+    assert np.asarray(fm.x).tobytes() == np.asarray(ref.x).tobytes()
+    # lazy chaining doesn't mutate the source frame
+    assert frame.n_kept == len(frame)
+
+
+def test_frame_empty_cohort():
+    from repro.data.dbmart import DBMart
+
+    db = DBMart(np.zeros((2, 8), np.int32), np.zeros((2, 8), np.int32),
+                np.zeros(2, np.int32), None)
+    frame = MiningSession(MiningConfig(threshold=1)).fit(db)
+    assert len(frame) == 0 and frame.screen().n_kept == 0
+    r = frame.screen().top_k(3).collect()
+    assert len(r.seq) == 0
+    fm = frame.to_features()
+    assert np.asarray(fm.x).shape[1] == 0
+
+
+# --- incremental input -------------------------------------------------------
+def test_incremental_equals_batch_fit():
+    rng = np.random.default_rng(23)
+    db = random_dbmart(rng, n_patients=8, max_events=14)
+    batch = MiningSession(MiningConfig(threshold=2, n_buckets_log2=H,
+                                       screen="hash")).fit(db)
+
+    sess = MiningSession(MiningConfig(threshold=2, n_buckets_log2=H,
+                                      screen="hash", tick_patients=2))
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        cut = n // 2
+        if cut:
+            sess.submit(p, db.date[p, :cut], db.phenx[p, :cut])
+        if n - cut:
+            sess.submit(p, db.date[p, cut:n], db.phenx[p, cut:n])
+    f = sess.tick()                      # one wave, then drain
+    assert f is not None
+    final = sess.run()
+    assert sess.plan().engine == "stream"
+
+    br, fr = batch.screen().collect(), final.screen().collect()
+    for a, b in zip(br, fr):
+        assert a.tobytes() == b.tobytes()
+
+
+def test_frame_after_batch_fit_and_mode_guards():
+    """frame() after a batch fit returns the fit result (it must not
+    silently spawn an empty streaming service), and a fitted session
+    refuses incremental submit."""
+    rng = np.random.default_rng(31)
+    db = random_dbmart(rng, n_patients=6, max_events=10)
+    sess = MiningSession(MiningConfig(threshold=1))
+    fitted = sess.fit(db)
+    assert sess.frame() is fitted
+    assert sess.service is None
+    with pytest.raises(RuntimeError):
+        sess.submit(0, [1], [2])
+    # frame() before any input must not spawn a service as a side effect
+    fresh = MiningSession(MiningConfig())
+    with pytest.raises(RuntimeError):
+        fresh.frame()
+    assert fresh.service is None
+    fresh.submit(0, [1, 2], [3, 4])
+    assert fresh.run().n_kept == 1
+
+
+def test_files_engine_cleans_tmp_spill(tmp_path, monkeypatch):
+    import os
+    import tempfile as tf
+
+    monkeypatch.setattr(tf, "tempdir", str(tmp_path))
+    rng = np.random.default_rng(5)
+    db = random_dbmart(rng, n_patients=6, max_events=10)
+    MiningSession(MiningConfig(engine="files", threshold=1)).fit(db)
+    assert not [d for d in os.listdir(tmp_path)
+                if d.startswith("tspm_spill_")]
+    # an explicit spill_dir is the caller's: artifacts stay
+    keep = tmp_path / "keep"
+    MiningSession(MiningConfig(engine="files", threshold=1,
+                               spill_dir=str(keep))).fit(db)
+    assert (keep / "bucket_counts.npy").exists()
+
+
+def test_service_queries_fuse_aware():
+    """Regression (code review): StreamService.query_starts_with on a
+    fused corpus unpacked raw ids — duration bits read as phenX."""
+    from repro.stream.service import StreamService
+    from repro.stream.shard import ShardedStreamService
+
+    for svc in (StreamService(fuse_duration=True, n_buckets_log2=H),
+                ShardedStreamService(n_shards=2, fuse_duration=True,
+                                     n_buckets_log2=H)):
+        svc.submit(0, [0, 40, 95], [2, 3, 4])
+        svc.run()
+        assert int(svc.query_starts_with(2).sum()) == 2
+        assert int(svc.query_ends_with(4).sum()) == 2
+
+
+def test_incremental_sharded_and_guards():
+    sess = MiningSession(MiningConfig(n_shards=3, tick_patients=2,
+                                      n_buckets_log2=H))
+    sess.submit("a", [1, 2], [3, 4])
+    sess.submit("b", [1], [5])
+    frame = sess.run()
+    assert sess.plan().engine == "sharded"
+    assert len(frame) == 1               # only patient 'a' mined one pair
+    with pytest.raises(RuntimeError):
+        sess.fit(random_dbmart(np.random.default_rng(0)))
+    with pytest.raises(ValueError):
+        MiningSession(MiningConfig(engine="batch")).submit("a", [1], [2])

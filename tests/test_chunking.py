@@ -56,6 +56,40 @@ def test_chunked_screen_matches_global(tmp_path):
     assert n_file == n_ref
 
 
+def test_hash_screen_threshold_edge(tmp_path):
+    """Support exactly == threshold must survive in BOTH file-based and
+    in-memory modes (the screen is `>= threshold`), and == threshold-1
+    must be dropped — with per-patient chunks, so the count only reaches
+    the threshold after the cross-chunk table merge."""
+    n_support = 5
+    pats = [p for p in range(n_support) for _ in range(2)]
+    dates = [d for _ in range(n_support) for d in (0, 10)]
+    phx = [x for _ in range(n_support) for x in ("A", "B")]
+    db = from_rows(pats, dates, phx)
+    budget = 900            # one patient per chunk: 8*8*26*0.5 = 832 bytes
+    assert len(chunking.plan_chunks(np.asarray(db.nevents), budget)) \
+        == n_support
+
+    for threshold, survives in ((n_support, True), (n_support + 1, False)):
+        out = chunking.mine_chunked(db, budget_bytes=budget,
+                                    threshold=threshold)
+        assert int(out["keep"].sum()) == (n_support if survives else 0)
+
+        chunking.mine_to_files(db, str(tmp_path / f"spill{threshold}"),
+                               budget_bytes=budget)
+        n_file = sum(len(part["seq"]) for part in chunking.screen_files(
+            str(tmp_path / f"spill{threshold}"), threshold))
+        assert n_file == (n_support if survives else 0)
+
+    # load_files round-trips the unscreened corpus + merged table
+    out = chunking.load_files(str(tmp_path / f"spill{n_support}"))
+    assert len(out["seq"]) == n_support
+    # one distinct id, deduped per patient: n_support contributions total
+    assert int(out["counts"].sum()) == n_support
+    ref = chunking.mine_chunked(db, budget_bytes=budget, with_counts=True)
+    assert (out["counts"] == ref["counts"]).all()
+
+
 def test_scheduler_work_stealing():
     from repro.data.pipeline import ChunkScheduler
 

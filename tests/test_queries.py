@@ -42,6 +42,54 @@ def test_transitive_ends_with(s):
     assert int(got.sum()) == expect
 
 
+def test_fused_queries_match_unfused():
+    """Duration-fused ids must decode through the fuse-aware path: the raw
+    unpack reads duration bits as phenX (the pre-fix bug).  Fused masks
+    must equal the unfused masks pair-for-pair (fusing only appends bucket
+    bits; it never changes which (start, end) a row carries)."""
+    rng = np.random.default_rng(77)
+    db = random_dbmart(rng, n_patients=10, max_events=16, date_range=2000)
+    plain = mining.mine_triangular(db.phenx, db.date, db.nevents)
+    fused = mining.mine_triangular(db.phenx, db.date, db.nevents,
+                                   fuse_duration=True, bucket_days=30)
+    pseq, _, _, msk = (np.asarray(x) for x in mining.flatten(plain))
+    fseq, _, _, _ = (np.asarray(x) for x in mining.flatten(fused))
+    pairs = brute_force_pairs(db)
+    xs = {a for (_, a, _, _) in pairs} | {b for (_, _, b, _) in pairs}
+    for x in sorted(xs)[:6]:
+        ref_start = np.asarray(queries.starts_with(pseq, x)) & msk
+        ref_end = np.asarray(queries.ends_with(pseq, x)) & msk
+        got_start = np.asarray(queries.starts_with(fseq, x, fused=True)) & msk
+        got_end = np.asarray(queries.ends_with(fseq, x, fused=True)) & msk
+        assert (got_start == ref_start).all()
+        assert (got_end == ref_end).all()
+        ref_set = np.asarray(queries.end_set(pseq, msk, x))
+        got_set = np.asarray(queries.end_set(fseq, msk, x, fused=True))
+        assert (ref_set == got_set).all()
+        ref_t = np.asarray(queries.transitive_ends_with(pseq, msk, x))
+        got_t = np.asarray(queries.transitive_ends_with(fseq, msk, x,
+                                                        fused=True))
+        assert (ref_t == got_t).all()
+    # regression: on a corpus with nonzero buckets the raw path *does*
+    # mis-decode (this is what made fused snapshots silently wrong)
+    buckets = np.asarray(encoding.split_duration(fseq[msk])[1])
+    if (buckets > 0).any():
+        x = next(a for (_, a, _, _) in pairs)
+        raw = np.asarray(queries.starts_with(fseq, x)) & msk
+        ref = np.asarray(queries.starts_with(pseq, x)) & msk
+        assert (raw != ref).any()
+
+
+def test_decode_sequence_fused():
+    from repro.core.encoding import build_vocab, pack
+
+    vocab = build_vocab([0], ["A", "B"])
+    sid = int(np.asarray(pack(0, 1)))
+    assert vocab.decode_sequence(sid) == "A -> B"
+    fused_id = int(np.asarray(encoding.fuse_duration(sid, 3)))
+    assert vocab.decode_sequence(fused_id, fused=True) == "A -> B [bucket 3]"
+
+
 def test_end_set_padding_and_sorting():
     db = random_dbmart(np.random.default_rng(9))
     mined = mining.mine_triangular(db.phenx, db.date, db.nevents)

@@ -120,6 +120,53 @@ def test_hash_router_is_stable_and_sticky():
     assert stable_shard_hash("x") == stable_shard_hash("x")
 
 
+def _submit_patient(svc, key, n_events):
+    svc.submit(key, np.arange(n_events, dtype=np.int32),
+               np.zeros(n_events, np.int32))
+
+
+def test_rebalance_min_gain_hysteresis():
+    """A borderline patient whose move barely dents the imbalance stays
+    put (handoff costs host copies + a retrace); with the guard off the
+    same move happens.  Near-balanced cohorts must produce zero moves."""
+    from repro.core import chunking as chk
+
+    def build():
+        svc = ShardedStreamService(
+            n_shards=2, router=ShardRouter(2, pinned={0: 0, 1: 0, 2: 1}),
+            tick_patients=4, n_buckets_log2=H)
+        # shard0: costs 4^2, 20^2; shard1: 19^2 (x BYTES_PER_PAIR).
+        # moving patient 0 (cost 416) is legal for the old LPT guard but
+        # its gain (416) is under min_gain * mean (~505 at 0.05)
+        for key, n in ((0, 4), (1, 20), (2, 19)):
+            _submit_patient(svc, key, n)
+        svc.run()
+        return svc
+
+    svc = build()
+    loads = svc.shard_loads()
+    mean = sum(loads) / 2
+    gain = loads[0] - max(loads[0] - 4 * 4 * chk.BYTES_PER_PAIR,
+                          loads[1] + 4 * 4 * chk.BYTES_PER_PAIR)
+    assert 0 < gain < 0.05 * mean     # the scenario is actually borderline
+
+    assert svc.rebalance(imbalance_threshold=1.0) == []      # guard holds
+    assert svc.migrations == []
+
+    svc = build()
+    moves = svc.rebalance(imbalance_threshold=1.0, min_gain=0.0)
+    assert moves == [(0, 0, 1)]       # guard off: the borderline move runs
+
+    # a near-balanced cohort (equal costs) never migrates, guard or not
+    svc = ShardedStreamService(
+        n_shards=2, router=ShardRouter(2, pinned={0: 0, 1: 1}),
+        tick_patients=4, n_buckets_log2=H)
+    for key in (0, 1):
+        _submit_patient(svc, key, 12)
+    svc.run()
+    assert svc.rebalance(imbalance_threshold=1.0, min_gain=0.0) == []
+
+
 def test_sharded_merges_with_batch_screen_counts():
     """Half the cohort batch-mined, half stream-sharded: merged tables
     equal the all-batch table (cold + hot cohorts screen together)."""
