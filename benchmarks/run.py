@@ -17,6 +17,11 @@
                      sticky routing vs load-triggered patient migration
                      (``--suite streaming_rebalance`` writes
                      BENCH_streaming_rebalance.json)
+  streaming_placement -> device-pinned shards vs host-serial ticks on
+                     forced host devices (sets XLA_FLAGS before jax
+                     loads; ``--suite streaming_placement`` writes
+                     BENCH_streaming_placement.json, exactness asserted
+                     against the batch oracle)
   api_overhead    -> unified session façade (repro.api) vs hand-wired
                      mine->flatten->screen; batch-path dispatch overhead
                      must stay < 5% (``--suite api_overhead`` writes
@@ -112,6 +117,33 @@ def streaming_rebalance_bench(small=True, out_path=None):
     streaming.main_rebalance(small=small, json_path=out_path, backend="jnp")
 
 
+def _force_host_devices(n: int) -> None:
+    """Give the CPU backend ``n`` devices — must happen before jax loads
+    (XLA reads the flag at backend init).  A no-op when the process
+    already sees >= 2 devices; fails fast when jax is already up with a
+    single device (the flag would silently not apply)."""
+    if "jax" in sys.modules:
+        import jax
+
+        if len(jax.devices()) >= 2:
+            return
+        raise SystemExit(
+            "jax is already initialized with a single device; run "
+            "--suite streaming_placement in a fresh process")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            (flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def streaming_placement_bench(small=True, out_path=None):
+    _force_host_devices(2 if small else 4)
+    from benchmarks import streaming
+
+    out_path = out_path or "BENCH_streaming_placement.json"
+    streaming.main_placement(small=small, json_path=out_path, backend="jnp")
+
+
 def api_overhead_bench(small=True, out_path=None):
     from benchmarks import api_overhead
 
@@ -125,6 +157,8 @@ SUITES = {
                           streaming_sharded_bench),
     "streaming_rebalance": ("live shard rebalancing (sticky vs migrated)",
                             streaming_rebalance_bench),
+    "streaming_placement": ("device-pinned shards vs host-serial ticks",
+                            streaming_placement_bench),
     "api_overhead": ("session façade vs hand-wired batch path",
                      api_overhead_bench),
 }

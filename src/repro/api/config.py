@@ -23,6 +23,15 @@ ENGINES = ("batch", "chunked", "files", "stream", "sharded")
 
 SCREEN_MODES = ("sorted", "hash")
 
+#: Shard state placement for the sharded engine:
+#:   auto    — planner picks 'devices' when the host has at least one
+#:             device per shard, else 'host'
+#:   host    — every shard on the default device, shard-serial ticks
+#:   devices — one device per shard (launch/mesh.shard_devices), ticks
+#:             dispatched on every shard before any is collected, and
+#:             migration handoffs admitted at the tick boundary (async)
+PLACEMENTS = ("auto", "host", "devices")
+
 
 @dataclasses.dataclass(frozen=True)
 class MiningConfig:
@@ -50,6 +59,7 @@ class MiningConfig:
     max_slot_events: int = 512      # flood cap per slot (stream.service)
     n_shards: int = 1               # patient shards (>1 selects 'sharded')
     router: str = "hash"            # 'hash' | 'balance' (LPT, needs nevents)
+    placement: str = "auto"         # shard state placement (PLACEMENTS)
     rebalance_every: int | None = None   # auto-rebalance period (ticks)
     imbalance_threshold: float = 1.5     # hot-shard trigger (x mean load)
     min_gain: float = 0.05               # migration hysteresis (x mean load)
@@ -65,6 +75,9 @@ class MiningConfig:
                 f"unknown engine {self.engine!r}; one of {ENGINES}")
         if self.router not in ("hash", "balance"):
             raise ValueError(f"unknown router {self.router!r}")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {self.placement!r}; one of {PLACEMENTS}")
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
 
@@ -94,6 +107,7 @@ class Plan:
     corpus_bytes: int = 0
     n_chunks: int = 1
     n_shards: int = 1
+    placement: str = "host"     # resolved (never 'auto'): shard placement
     incremental: bool = False
 
     def __str__(self) -> str:
@@ -107,7 +121,8 @@ class Plan:
         if self.n_chunks > 1:
             lines.append(f"  chunks      : {self.n_chunks}")
         if self.n_shards > 1:
-            lines.append(f"  shards      : {self.n_shards}")
+            lines.append(f"  shards      : {self.n_shards}"
+                         f" ({self.placement} placement)")
         if self.incremental:
             lines.append("  input       : incremental (submit/tick)")
         return "\n".join(lines)

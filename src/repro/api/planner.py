@@ -12,12 +12,21 @@ encodes that decision tree once, using the same cost model everywhere
   * flat corpus > spill_bytes  -> 'files' (host RAM is the next wall);
   * otherwise                  -> 'chunked'.
 
+For the sharded engine the plan also resolves *placement*: with
+``placement='auto'`` shards are pinned one-per-device whenever sharding
+is actually on (``n_shards > 1``) and the host has at least as many
+devices as shards (every tick then overlaps across devices and migration
+handoffs admit asynchronously), else they stay host-serial on the
+default device.  Both placements are byte-identical;
+the choice is again purely a resource decision.
+
 ``MiningConfig.engine`` short-circuits everything — the plan records that
 it was forced.  Every engine yields byte-identical results (the conformance
 suite), so the choice is purely a resource decision.
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from repro.api.config import MiningConfig, Plan
@@ -41,6 +50,19 @@ def _corpus_bytes(nevents: np.ndarray) -> int:
     return int(np.sum(n * (n - 1) // 2)) * _BYTES_PER_ROW
 
 
+def resolve_placement(config: MiningConfig) -> str:
+    """Shard placement for the sharded engine, 'auto' resolved against the
+    visible devices: pin one shard per device when the host can (ticks
+    overlap across devices, migration admits async), else host-serial.
+    Forced 'devices' is honored even with fewer devices than shards
+    (round-robin assignment — still correct, shards just share devices)."""
+    if config.placement != "auto":
+        return config.placement
+    if config.n_shards > 1 and len(jax.devices()) >= config.n_shards:
+        return "devices"
+    return "host"
+
+
 def make_plan(config: MiningConfig, nevents=None,
               incremental: bool = False) -> Plan:
     """Decide the engine for a cohort (``nevents`` per patient) or an
@@ -52,9 +74,11 @@ def make_plan(config: MiningConfig, nevents=None,
     budget = config.budget_bytes
     n_chunks = (len(chunking.plan_chunks(nevents, budget))
                 if budget is not None and len(nevents) else 1)
+    placement = resolve_placement(config)
     common = dict(working_set_bytes=ws, budget_bytes=budget,
                   corpus_bytes=corpus, n_chunks=n_chunks,
-                  n_shards=config.n_shards, incremental=incremental)
+                  n_shards=config.n_shards, placement=placement,
+                  incremental=incremental)
 
     if config.engine is not None:
         return Plan(config.engine,
@@ -62,11 +86,13 @@ def make_plan(config: MiningConfig, nevents=None,
     if incremental:
         if config.n_shards > 1:
             return Plan("sharded", f"incremental input over "
-                        f"{config.n_shards} patient shards", **common)
+                        f"{config.n_shards} patient shards "
+                        f"({placement} placement)", **common)
         return Plan("stream", "incremental input (submit/tick)", **common)
     if config.n_shards > 1:
         return Plan("sharded", f"config requests {config.n_shards} patient "
-                    "shards; batch input replayed through them", **common)
+                    "shards; batch input replayed through them "
+                    f"({placement} placement)", **common)
     # spill is a host-RAM decision, independent of the device working set:
     # a cohort can fit the mining budget chunk-by-chunk and still produce a
     # flat corpus too big to hold in memory

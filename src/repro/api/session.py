@@ -206,7 +206,8 @@ class MiningSession:
             n_shards=c.n_shards, router=router, mesh=self.mesh,
             rebalance_every=c.rebalance_every,
             imbalance_threshold=c.imbalance_threshold,
-            min_gain=c.min_gain, **kw)
+            min_gain=c.min_gain,
+            placement=planner.resolve_placement(c), **kw)
 
     def _snap_frame(self, svc, vocab=None, n_patients=None) -> SequenceFrame:
         snap = svc.snapshot()

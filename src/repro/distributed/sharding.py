@@ -13,6 +13,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -94,6 +95,25 @@ def param_shardings(mesh, spec_tree, struct_tree=None):
         is_leaf=lambda v: isinstance(v, P))
 
 
+def _device_resident_stack(tables, mesh, axis: str):
+    """[S, B] global array assembled from per-shard tables *in place* when
+    each table already lives on its mesh-position device (the
+    device-pinned streaming layout): no host round-trip, no cross-device
+    copy — the psum reads each device's table where it sits.  Returns
+    None when the layout doesn't match (then the caller host-gathers)."""
+    mesh_devs = list(mesh.devices.flat)
+    if len(tables) != len(mesh_devs) or mesh.shape[axis] != len(mesh_devs):
+        return None
+    parts = []
+    for t, d in zip(tables, mesh_devs):
+        if not isinstance(t, jax.Array) or t.devices() != {d}:
+            return None
+        parts.append(t[None])
+    return jax.make_array_from_single_device_arrays(
+        (len(tables),) + tables[0].shape,
+        NamedSharding(mesh, P(axis)), parts)
+
+
 def merge_sharded_counts(tables, mesh=None, axis: str = "data"):
     """Global screen table from per-shard bucket-count tables: one psum.
 
@@ -103,9 +123,20 @@ def merge_sharded_counts(tables, mesh=None, axis: str = "data"):
     (``sparsity.merge_bucket_counts``).  With a mesh, the [S, B] stack is
     sharded over ``axis`` and reduced with a single shard_map'd psum (each
     device folds its local shard rows first), the collective pattern of
-    ``sparsity.screen_hash``; without one, the sum runs locally.
+    ``sparsity.screen_hash``; without one, the sum runs locally.  Tables
+    pinned one-per-mesh-device (``ShardedStreamService`` with
+    ``placement='devices'``) are stacked in place; any other committed
+    layout gathers through the host first — ``jnp.stack`` cannot mix
+    device commitments.
     """
-    stacked = jnp.stack([jnp.asarray(t) for t in tables])
+    tables = [jnp.asarray(t) for t in tables]
+    if mesh is not None:
+        resident = _device_resident_stack(tables, mesh, axis)
+        if resident is not None:
+            return _jitted_merge(mesh, axis)(resident)
+    if len({d for t in tables for d in t.devices()}) > 1:
+        tables = [np.asarray(t) for t in tables]
+    stacked = jnp.stack(tables)
     if mesh is None:
         return stacked.sum(axis=0)
     n = mesh.shape[axis]

@@ -43,3 +43,16 @@ def make_data_mesh(n: int | None = None):
     devices = jax.devices()
     n = len(devices) if n is None else min(n, len(devices))
     return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))
+
+
+def shard_devices(n_shards: int, mesh=None) -> list:
+    """One device per shard slot, in mesh position order.
+
+    Shard ``s`` of the streaming service lives at mesh position ``s`` (its
+    sketch table is row ``s`` of the psum-merged [S, 2^H] stack), so its
+    planes pin to that position's device.  With fewer devices than shards
+    the assignment wraps round-robin — co-resident shards still mine
+    correctly, they just share a queue (and the psum fast path falls back
+    to the host-gather merge)."""
+    devices = list(mesh.devices.flat) if mesh is not None else jax.devices()
+    return [devices[s % len(devices)] for s in range(n_shards)]

@@ -53,6 +53,13 @@ def main(argv=None):
                     help="store byte budget in MiB (0 = unbounded)")
     ap.add_argument("--shards", type=int, default=1,
                     help="patient shards over the ('data',) mesh")
+    ap.add_argument("--placement", default="auto",
+                    choices=["auto", "host", "devices"],
+                    help="shard state placement: 'devices' pins one shard "
+                         "per device (overlapped ticks, async migration "
+                         "admits), 'host' keeps shards serial on the "
+                         "default device, 'auto' picks 'devices' when the "
+                         "host has >= 1 device per shard")
     ap.add_argument("--router", default="balance",
                     choices=["hash", "balance"],
                     help="patient->shard routing (balance pins by LPT "
@@ -82,6 +89,7 @@ def main(argv=None):
         n_buckets_log2=args.buckets_log2, tick_patients=args.tick_patients,
         budget_bytes=(args.budget_mb << 20) or None,
         n_shards=args.shards, router=args.router,
+        placement=args.placement,
         rebalance_every=args.rebalance_every or None,
         imbalance_threshold=args.imbalance_threshold,
         min_gain=args.min_gain)

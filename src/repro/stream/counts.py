@@ -55,15 +55,39 @@ def sketch_update(counts, stored, seq, mask, n_buckets_log2: int):
     return counts, merged, jnp.sum(novel, axis=1).astype(jnp.int32)
 
 
-class OnlineSupportSketch:
-    """Incrementally maintained hash-bucket support table + per-patient sets."""
+class _PendingSketchUpdate:
+    """Device phase of one tick's sketch fold, awaiting host bookkeeping.
 
-    def __init__(self, n_buckets_log2: int = 20, pad_multiple: int = 64):
+    ``counts`` was already swapped in by ``update_begin`` (device arrays
+    are futures; nothing blocked).  ``update_finish`` materializes
+    ``n_novel`` and lands ``merged`` in the set planes."""
+
+    __slots__ = ("pids", "merged", "n_novel")
+
+    def __init__(self, pids, merged, n_novel):
+        self.pids = pids
+        self.merged = merged
+        self.n_novel = n_novel
+
+
+class OnlineSupportSketch:
+    """Incrementally maintained hash-bucket support table + per-patient sets.
+
+    ``device`` pins the table and set planes (same commitment contract as
+    :class:`~repro.stream.store.PatientStore`): tick folds and handoff
+    scatters stay on that device."""
+
+    def __init__(self, n_buckets_log2: int = 20, pad_multiple: int = 64,
+                 device=None):
         self.n_buckets_log2 = n_buckets_log2
         self.pad_multiple = pad_multiple
+        self.device = device
         self.counts = jnp.zeros(1 << n_buckets_log2, jnp.int32)
         self.seqset = jnp.full((0, pad_multiple), SENTINEL, jnp.int64)
         self.n_distinct = np.zeros(0, np.int32)
+        if device is not None:
+            self.counts = jax.device_put(self.counts, device)
+            self.seqset = jax.device_put(self.seqset, device)
 
     @property
     def n_patients(self) -> int:
@@ -95,6 +119,13 @@ class OnlineSupportSketch:
         Pids must be distinct: rows gather/scatter the per-patient sets,
         so a repeated pid would double-count its buckets and lose part of
         its merged set."""
+        return self.update_finish(self.update_begin(pids, seq, mask))
+
+    def update_begin(self, pids, seq, mask) -> _PendingSketchUpdate:
+        """Device phase only: dispatch the jitted fold and swap the new
+        table in without forcing any host transfer, so a sharded tick can
+        enqueue every shard's fold before blocking on the first
+        (``update_finish`` completes the host bookkeeping)."""
         pids = np.asarray(pids, np.int32)
         if len(np.unique(pids)) != len(pids):
             raise ValueError("duplicate pids in one sketch update")
@@ -104,14 +135,20 @@ class OnlineSupportSketch:
         self.counts, merged, n_novel = sketch_update(
             self.counts, stored, jnp.asarray(seq).reshape(B, -1),
             jnp.asarray(mask).reshape(B, -1), self.n_buckets_log2)
-        self.n_distinct[pids] += np.asarray(n_novel)
+        return _PendingSketchUpdate(pids, merged, n_novel)
+
+    def update_finish(self, pending: _PendingSketchUpdate) -> int:
+        """Host phase: materialize the novel counts, grow the set planes if
+        a patient's distinct set outgrew them, and land the merged rows."""
+        pids, merged = pending.pids, pending.merged
+        self.n_distinct[pids] += np.asarray(pending.n_novel)
         self._ensure_columns(int(self.n_distinct.max(initial=1)))
         C = self.seqset.shape[1]
         if merged.shape[1] < C:
             merged = jnp.pad(merged, ((0, 0), (0, C - merged.shape[1])),
                              constant_values=SENTINEL)
         self.seqset = self.seqset.at[pids].set(merged[:, :C])
-        return int(np.asarray(n_novel).sum())
+        return int(np.asarray(pending.n_novel).sum())
 
     # --- migration handoff --------------------------------------------------
     def _bucket_transfer(self, ids: np.ndarray, sign: int) -> None:

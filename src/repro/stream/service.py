@@ -63,6 +63,25 @@ class TickStats:
 
 
 @dataclasses.dataclass
+class PendingTick:
+    """A dispatched-but-uncollected tick: the mined slab and sketch fold
+    are in flight on the service's device; ``tick_finish`` materializes
+    them.  Lets a sharded tick enqueue every shard's mining before the
+    first host-blocking read, so shards pinned to different devices
+    overlap instead of running host-serial."""
+
+    B: int
+    pids: np.ndarray
+    mined: object                 # Mined (device arrays, async)
+    sketch_pending: object        # counts_lib._PendingSketchUpdate
+    n_old: np.ndarray
+    n_new: np.ndarray
+    t0: float   # begin time; the resulting TickStats.wall_s spans
+                # begin-to-finish, so concurrently-pending ticks on other
+                # shards overlap inside it (sum != aggregate busy time)
+
+
+@dataclasses.dataclass
 class PatientState:
     """Everything a patient owns on a shard — the migration payload.
 
@@ -117,7 +136,8 @@ class StreamService(SnapshotQueries):
                  backend: str = "jnp", interpret: bool | None = None,
                  n_buckets_log2: int = 20, budget_bytes: int | None = None,
                  pad_multiple: int = 8, fuse_duration: bool = False,
-                 bucket_days: int = 30, max_slot_events: int = 512):
+                 bucket_days: int = 30, max_slot_events: int = 512,
+                 device=None):
         self.tick_patients = tick_patients
         self.max_slot_events = max_slot_events
         self.codec = codec
@@ -125,9 +145,11 @@ class StreamService(SnapshotQueries):
         self.interpret = interpret
         self.fuse_duration = fuse_duration
         self.bucket_days = bucket_days
+        self.device = device
         self.store = PatientStore(pad_multiple=pad_multiple,
-                                  budget_bytes=budget_bytes)
-        self.sketch = counts_lib.OnlineSupportSketch(n_buckets_log2)
+                                  budget_bytes=budget_bytes, device=device)
+        self.sketch = counts_lib.OnlineSupportSketch(n_buckets_log2,
+                                                     device=device)
         self.queue: deque[Delta] = deque()
         self._corpus: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
         self._snap: Snapshot | None = None   # cache, invalidated per tick
@@ -183,6 +205,19 @@ class StreamService(SnapshotQueries):
 
     def tick(self) -> TickStats | None:
         """Ingest one padded wave; returns stats (None if queue empty)."""
+        pending = self.tick_begin()
+        return None if pending is None else self.tick_finish(pending)
+
+    def tick_begin(self) -> PendingTick | None:
+        """Assemble and *dispatch* one wave without collecting results.
+
+        Everything device-side (append scatter, delta slab, sketch fold)
+        is enqueued asynchronously; the only device sync is the cursor
+        read, which waits on the previous tick's cheap scatters, never on
+        mining.  A sharded service calls this on every shard first, so
+        each device starts mining before any shard's results are pulled
+        back; ``tick_finish`` must run before the next ``tick_begin`` on
+        the *same* service (the corpus log and eviction are per-wave)."""
         wave = self._next_wave()
         if not wave:
             return None
@@ -210,8 +245,14 @@ class StreamService(SnapshotQueries):
             n_old, n_new, new_phenx, new_date, codec=self.codec,
             fuse_duration=self.fuse_duration, bucket_days=self.bucket_days,
             backend=self.backend, interpret=self.interpret)
-        self.sketch.update(pids, mined.seq, mined.mask)
+        sketch_pending = self.sketch.update_begin(pids, mined.seq, mined.mask)
+        return PendingTick(B, pids, mined, sketch_pending, n_old, n_new, t0)
 
+    def tick_finish(self, pending: PendingTick) -> TickStats:
+        """Collect a dispatched wave: materialize the mined slab, finish
+        the sketch's host bookkeeping, append the corpus log, evict."""
+        B, mined, pids = pending.B, pending.mined, pending.pids
+        self.sketch.update_finish(pending.sketch_pending)
         m = np.asarray(mined.mask).reshape(B, -1)
         seq = np.asarray(mined.seq).reshape(B, -1)
         dur = np.asarray(mined.dur).reshape(B, -1)
@@ -221,9 +262,10 @@ class StreamService(SnapshotQueries):
 
         self.store.evict_over_budget()
         st = TickStats(
-            n_patients=B, n_events=int(n_new.sum()),
-            n_pairs=int(delta_lib.count_delta_pairs(n_old, n_new)),
-            wall_s=time.perf_counter() - t0)
+            n_patients=B, n_events=int(pending.n_new.sum()),
+            n_pairs=int(delta_lib.count_delta_pairs(pending.n_old,
+                                                    pending.n_new)),
+            wall_s=time.perf_counter() - pending.t0)
         self.stats.append(st)
         return st
 

@@ -59,8 +59,11 @@ import numpy as np
 from repro.core import chunking, sparsity
 from repro.data import pipeline
 from repro.distributed.sharding import merge_sharded_counts
+from repro.launch.mesh import shard_devices
 from repro.stream.service import Snapshot, SnapshotQueries, StreamService, \
     TickStats
+
+PLACEMENTS = ("host", "devices")
 
 
 def stable_shard_hash(key) -> int:
@@ -118,28 +121,63 @@ class ShardedStreamService(SnapshotQueries):
     configure each shard's StreamService (note ``budget_bytes`` is *per
     shard*: the eviction working set is a shard-local property, like the
     per-chunk byte budget of batch chunking).
+
+    ``placement`` picks where shard state lives and how ticks dispatch:
+
+      * ``'host'`` — every shard on jax's default device, ticks run
+        shard-serial (the pre-device behavior, and the conformance
+        reference);
+      * ``'devices'`` — shard ``s``'s store planes and sketch table are
+        pinned to mesh position ``s`` (``launch.mesh.shard_devices``;
+        round-robin when shards outnumber devices), and ``tick`` runs in
+        two passes: every shard's wave is *dispatched*
+        (``StreamService.tick_begin``) before any shard's results are
+        collected, so the per-device mining overlaps instead of
+        host-serializing.  Results are byte-identical to ``'host'``
+        (same programs on the same values, one psum for the screen).
+
+    ``async_migration`` (default: on exactly for ``'devices'``) makes
+    ``migrate`` two-phase: phase 1 snapshots the source patient's
+    spill-format state and enqueues it for the destination; phase 2 admits
+    it at the next tick boundary, after the *other* shards' waves are
+    already dispatched — so handoff wall-clock overlaps mining instead of
+    serializing inside ``tick``.  Any read that needs whole-cohort state
+    (snapshot, global counts, load accounting) flushes pending admits
+    first, so results are again schedule-invariant.
     """
 
     def __init__(self, n_shards: int = 1, router: ShardRouter | None = None,
                  mesh=None, rebalance_every: int | None = None,
                  imbalance_threshold: float = 1.5, min_gain: float = 0.05,
+                 placement: str = "host", async_migration: bool | None = None,
                  **service_kwargs):
         if router is not None and router.n_shards != n_shards:
             raise ValueError(f"router covers {router.n_shards} shards, "
                              f"service has {n_shards}")
+        if placement not in PLACEMENTS:
+            raise ValueError(
+                f"unknown placement {placement!r}; one of {PLACEMENTS}")
         self.router = router or ShardRouter(n_shards)
         self.mesh = mesh
         self.rebalance_every = rebalance_every
         self.imbalance_threshold = imbalance_threshold
         self.min_gain = min_gain
-        self.shards = [StreamService(**service_kwargs)
-                       for _ in range(n_shards)]
+        self.placement = placement
+        self.async_migration = (placement == "devices"
+                                if async_migration is None else async_migration)
+        self.devices = (shard_devices(n_shards, mesh)
+                        if placement == "devices" else [None] * n_shards)
+        self.shards = [StreamService(device=d, **service_kwargs)
+                       for d in self.devices]
         self.codec = self.shards[0].codec
         self.fuse_duration = self.shards[0].fuse_duration
         self.n_buckets_log2 = self.shards[0].sketch.n_buckets_log2
         self.pids: dict = {}        # key -> global pid (first-submit order)
         self.migrations: list[tuple] = []   # (key, src, dst) history
         self.migration_wall_s = 0.0         # host time spent in handoffs
+        self.admit_wall_s = 0.0     # phase-2 admits (overlaps mining)
+        self._pending_admits: list[list] = [[] for _ in range(n_shards)]
+        self._pending_keys: dict = {}       # key -> dst with state in flight
         self._tick_count = 0
         self._snap: Snapshot | None = None
 
@@ -160,10 +198,36 @@ class ShardedStreamService(SnapshotQueries):
         self.shards[self.router.route(key)].submit(key, dates, phenx)
 
     def tick(self) -> list[TickStats]:
-        """One wave on every shard with queued work (shard-parallel on a
-        real mesh; host-serial here).  Empty list == all queues drained."""
-        out = [st for svc in self.shards if svc.queue
-               for st in [svc.tick()] if st is not None]
+        """One wave on every shard with queued work.  Empty list == all
+        queues drained (and no migration state left in flight).
+
+        ``'devices'`` placement dispatches every shard's wave before
+        collecting any (each device mines while the host assembles the
+        next shard's wave); ``'host'`` keeps the serial per-shard tick.
+        Pending migration admits land here, at the tick boundary: shards
+        with no admit dispatch first, so a destination's restore overlaps
+        their mining instead of delaying it."""
+        order = sorted(range(self.n_shards),
+                       key=lambda s: bool(self._pending_admits[s]))
+        if self.placement == "devices":
+            begun = []
+            for s in order:
+                self._flush_pending(s)
+                svc = self.shards[s]
+                if svc.queue:
+                    p = svc.tick_begin()
+                    if p is not None:
+                        begun.append((svc, p))
+            out = [svc.tick_finish(p) for svc, p in begun]
+        else:
+            out = []
+            for s in order:
+                self._flush_pending(s)
+                svc = self.shards[s]
+                if svc.queue:
+                    st = svc.tick()
+                    if st is not None:
+                        out.append(st)
         if out:
             self._snap = None
             self._tick_count += 1
@@ -176,6 +240,10 @@ class ShardedStreamService(SnapshotQueries):
         out: list[TickStats] = []
         while any(svc.queue for svc in self.shards):
             out.extend(self.tick())
+        # no queued work never means no parked work: a migrate() with
+        # nothing left to mine would otherwise strand its patient in the
+        # admit queue past the drain
+        self._flush_pending()
         return out
 
     # --- migration / rebalancing --------------------------------------------
@@ -183,13 +251,27 @@ class ShardedStreamService(SnapshotQueries):
         """Hand a patient to shard ``dst``: queued deltas move in arrival
         order, then store history (spill format), sketch row (subtract/add)
         and mined corpus rows, and the router re-pins the key.  A no-op if
-        the key already lives on ``dst``."""
+        the key already lives on ``dst``.
+
+        With ``async_migration`` only phase 1 runs here — the source-side
+        extract (host copies off the source device) — and the state parks
+        in the destination's admit queue; the destination-side restore
+        (plane growth, sketch scatter, the shape-change retrace) is paid
+        at the next tick boundary, overlapped with the other shards'
+        dispatched mining.  The router re-pins immediately, so submits
+        after the handoff queue on the destination and mine only after its
+        state has landed (the tick admits before assembling that shard's
+        wave)."""
         if key not in self.pids:
             raise KeyError(f"unknown patient key {key!r}")
         if not 0 <= dst < self.n_shards:
             # before any mutation: a negative dst would otherwise index
             # shards[-1] and strand the state off-route
             raise ValueError(f"dst {dst} out of range [0, {self.n_shards})")
+        if key in self._pending_keys:
+            # the key's state is parked in an admit queue; land it so the
+            # source below is a real shard, not the queue
+            self._flush_pending()
         src = self.router.route(key)
         if src == dst:
             return
@@ -201,11 +283,35 @@ class ShardedStreamService(SnapshotQueries):
                 d for d in src_svc.queue if d.key != key)
             dst_svc.queue.extend(queued)
         if key in src_svc.store.pids:
-            dst_svc.admit_patient(src_svc.extract_patient(key))
+            state = src_svc.extract_patient(key)
+            if self.async_migration:
+                self._pending_admits[dst].append(state)
+                self._pending_keys[key] = dst
+            else:
+                dst_svc.admit_patient(state)
         self.router.assign(key, dst)
         self.migrations.append((key, src, dst))
         self.migration_wall_s += time.perf_counter() - t0
         self._snap = None
+
+    def _flush_pending(self, shard: int | None = None) -> None:
+        """Phase 2 of async migration: land parked patient states on their
+        destination shard (all shards when ``shard`` is None).  Called per
+        shard at the tick boundary, and by any whole-cohort read — a
+        snapshot taken between migrate() and the next tick must already
+        see the patient on its new home."""
+        targets = range(self.n_shards) if shard is None else (shard,)
+        for s in targets:
+            pending = self._pending_admits[s]
+            if not pending:
+                continue
+            t0 = time.perf_counter()
+            for state in pending:
+                self.shards[s].admit_patient(state)
+                del self._pending_keys[state.key]
+            pending.clear()
+            self.admit_wall_s += time.perf_counter() - t0
+            self._snap = None
 
     def _patient_costs(self, svc: StreamService) -> dict:
         """Per-patient mining cost on one shard: n^2 * BYTES_PER_PAIR over
@@ -220,6 +326,7 @@ class ShardedStreamService(SnapshotQueries):
 
     def shard_loads(self) -> list[int]:
         """Resident pair-cost bytes per shard (the rebalance signal)."""
+        self._flush_pending()
         return [sum(self._patient_costs(svc).values())
                 for svc in self.shards]
 
@@ -241,6 +348,7 @@ class ShardedStreamService(SnapshotQueries):
         thr = (self.imbalance_threshold if imbalance_threshold is None
                else imbalance_threshold)
         gain_floor = self.min_gain if min_gain is None else min_gain
+        self._flush_pending()   # cost accounting needs every patient homed
         costs = [self._patient_costs(svc) for svc in self.shards]
         loads = [sum(c.values()) for c in costs]
         mean = sum(loads) / len(loads)
@@ -278,11 +386,13 @@ class ShardedStreamService(SnapshotQueries):
 
     def global_counts(self) -> np.ndarray:
         """The merged support table (one psum over the mesh when set)."""
+        self._flush_pending()   # an in-flight patient's ids are subtracted
         return np.asarray(merge_sharded_counts(
             [svc.sketch.counts for svc in self.shards], self.mesh))
 
     def snapshot(self) -> Snapshot:
         """Whole-cohort corpus (global pids) + merged support table."""
+        self._flush_pending()   # in-flight corpus rows belong to no shard
         if self._snap is not None:
             return self._snap
         snaps = [svc.snapshot() for svc in self.shards]

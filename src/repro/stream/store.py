@@ -61,15 +61,28 @@ def _append_step(phenx, date, nevents, rows, new_phenx, new_date, n_new):
 
 
 class PatientStore:
-    """Growable padded history planes with admission / eviction / regrowth."""
+    """Growable padded history planes with admission / eviction / regrowth.
+
+    ``device`` pins the planes to one device (``jax.device_put`` once at
+    construction): every derived array — pads, scatter-appends, the delta
+    slabs mined from the planes — stays *committed* there, so a sharded
+    service can hold one store per mesh position and tick them without the
+    default-device serialization.  ``None`` keeps jax's default placement
+    (single-process behavior, byte-identical results).
+    """
 
     def __init__(self, pad_multiple: int = 8, budget_bytes: int | None = None,
-                 init_patients: int = 8, init_events: int = 8):
+                 init_patients: int = 8, init_events: int = 8, device=None):
         self.pad_multiple = pad_multiple
         self.budget_bytes = budget_bytes
+        self.device = device
         self.phenx = jnp.zeros((init_patients, init_events), jnp.int32)
         self.date = jnp.zeros((init_patients, init_events), jnp.int32)
         self.nevents = jnp.zeros(init_patients, jnp.int32)
+        if device is not None:
+            self.phenx = jax.device_put(self.phenx, device)
+            self.date = jax.device_put(self.date, device)
+            self.nevents = jax.device_put(self.nevents, device)
         self.rows: dict = {}          # patient key -> physical row
         self.pids: dict = {}          # patient key -> stable dense pid
         self.row_key: dict = {}       # physical row -> patient key

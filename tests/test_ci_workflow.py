@@ -1,0 +1,126 @@
+"""CI pipeline invariants, enforced from inside tier-1.
+
+The workflow is data; these tests are the lint that keeps its guarantees
+from rotting: the bench-smoke matrix must stay generated from the suite
+registry (so a new ``benchmarks/run.py`` suite can never be silently
+missing from the smoke list), every suite must write the artifact the
+smoke job uploads, the scheduled slow job must exist and actually select
+the ``slow`` marker, and every job must carry a timeout under the shared
+cancel-in-progress concurrency group.
+"""
+import os
+import re
+
+import pytest
+
+yaml = pytest.importorskip("yaml")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKFLOW = os.path.join(REPO, ".github", "workflows", "ci.yml")
+
+
+@pytest.fixture(scope="module")
+def workflow():
+    with open(WORKFLOW) as f:
+        return yaml.safe_load(f)
+
+
+@pytest.fixture(scope="module")
+def suites():
+    from benchmarks.run import SUITES
+
+    return SUITES
+
+
+def _triggers(workflow):
+    # YAML 1.1 parses a bare `on:` key as boolean True
+    return workflow.get("on", workflow.get(True))
+
+
+def test_workflow_parses_and_has_all_jobs(workflow):
+    assert {"tier1", "bench-registry", "bench-smoke",
+            "slow-nightly"} <= set(workflow["jobs"])
+
+
+def test_scheduled_slow_job(workflow):
+    crons = _triggers(workflow)["schedule"]
+    assert crons and all(len(c["cron"].split()) == 5 for c in crons)
+    slow = workflow["jobs"]["slow-nightly"]
+    assert "schedule" in slow["if"]
+    run_steps = " ".join(s.get("run", "") for s in slow["steps"])
+    assert "-m slow" in run_steps
+    assert "hypothesis" in " ".join(s.get("run", "") for s in slow["steps"])
+
+
+def test_concurrency_and_timeouts(workflow):
+    conc = workflow["concurrency"]
+    # cancel-in-progress is scoped to PR updates: superseded pushes to
+    # main must still get a completed verdict
+    assert "pull_request" in str(conc["cancel-in-progress"])
+    assert "github.ref" in conc["group"]
+    for name, job in workflow["jobs"].items():
+        assert "timeout-minutes" in job, f"job {name} has no timeout"
+
+
+def test_pip_cache_keyed_on_requirements(workflow):
+    req = os.path.join(REPO, ".github", "requirements-ci.txt")
+    assert os.path.exists(req)
+    for name in ("tier1", "bench-smoke", "slow-nightly"):
+        setup = [s for s in workflow["jobs"][name]["steps"]
+                 if "setup-python" in s.get("uses", "")]
+        assert setup, f"job {name} has no setup-python step"
+        with_ = setup[0]["with"]
+        assert with_.get("cache") == "pip"
+        assert with_.get("cache-dependency-path") == \
+            ".github/requirements-ci.txt"
+
+
+def test_jax_version_matrix_covers_both_sides(workflow):
+    """The tier-1 matrix must pin an oldest 0.4.x leg (compat.py's
+    fallback spellings) alongside whatever pip resolves today."""
+    legs = workflow["jobs"]["tier1"]["strategy"]["matrix"]["include"]
+    jaxes = {leg["jax"] for leg in legs}
+    assert {"oldest", "latest"} <= jaxes
+    assert re.search(r"jax\[cpu\]==0\.4\.\d+", str(workflow["env"]))
+
+
+def test_bench_smoke_matrix_is_the_registry(workflow, suites):
+    """The smoke matrix is *generated from* benchmarks.run.SUITES via the
+    bench-registry job, so no registered suite can be missing from the
+    smoke list; this pins the wiring on both ends."""
+    smoke = workflow["jobs"]["bench-smoke"]
+    assert smoke["needs"] == "bench-registry" \
+        or smoke["needs"] == ["bench-registry"]
+    matrix = smoke["strategy"]["matrix"]["suite"]
+    assert "fromJSON(needs.bench-registry.outputs.suites)" in matrix
+    listing = " ".join(s.get("run", "")
+                       for s in workflow["jobs"]["bench-registry"]["steps"])
+    assert "from benchmarks.run import SUITES" in listing
+    # and the registry itself is intact / importable with entries
+    assert len(suites) >= 5
+    assert "streaming_placement" in suites
+
+
+def test_every_suite_writes_its_smoke_artifact(workflow, suites):
+    """The smoke job uploads BENCH_<suite>.json with if-no-files-found:
+    error — every registered suite's runner must default to exactly that
+    path or the upload (and so the job) fails."""
+    upload = [s for s in workflow["jobs"]["bench-smoke"]["steps"]
+              if "upload-artifact" in s.get("uses", "")]
+    assert upload and upload[0]["with"]["if-no-files-found"] == "error"
+    assert upload[0]["with"]["path"] == "BENCH_${{ matrix.suite }}.json"
+    with open(os.path.join(REPO, "benchmarks", "run.py")) as f:
+        src = f.read()
+    for name in suites:
+        assert f'"BENCH_{name}.json"' in src, \
+            f"suite {name} does not write BENCH_{name}.json"
+
+
+def test_overhead_regression_gate_present(workflow):
+    """The checked-in BENCH_api_overhead.json is a regression baseline:
+    the gate must compare against it (2x) besides the 5% ceiling."""
+    runs = " ".join(s.get("run", "")
+                    for s in workflow["jobs"]["tier1"]["steps"])
+    assert "BENCH_api_overhead.json" in runs
+    assert "2 * stored" in runs
+    assert "0.05" in runs

@@ -1,0 +1,270 @@
+"""Device-pinned shards == host-serial shards == batch, byte for byte.
+
+``placement='devices'`` changes *where* shard state lives and *when* work
+is dispatched and migrations admitted — never what is computed.  These
+tests replay random dbmarts through both placements (n_shards 1/2/4, with
+eviction, with migration mid-stream, with the Pallas delta kernel, through
+the façade's fit and submit/tick surfaces) and require identical corpus,
+support counts, and screen masks, against each other and against batch
+mine+screen.  A subprocess case forces 4 host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4`` must be set before
+jax initializes) so one-shard-per-device placement and the device-resident
+psum stack are exercised for real, not just on a single shared device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import MiningConfig, MiningSession
+from repro.launch.mesh import make_data_mesh
+from repro.stream.shard import ShardedStreamService
+from tests.conftest import random_dbmart
+from tests.test_stream import H, batch_reference, replay
+from tests.test_stream_sharded import sharded_triples
+
+
+def corpus_triples(svc):
+    snap, keys = sharded_triples(svc)
+    return sorted(zip(keys, snap.seq, snap.dur)), np.asarray(snap.counts)
+
+
+def assert_conformant(db, make_svc, seed, threshold=2):
+    """host replay == devices replay == batch, on corpus/counts/screen."""
+    per_placement = {}
+    for placement in ("host", "devices"):
+        svc = make_svc(placement)
+        replay(db, svc, np.random.default_rng(seed))
+        triples, cnt = corpus_triples(svc)
+        keep = np.asarray(svc.screened_keep(threshold))
+        per_placement[placement] = (triples, cnt, int(keep.sum()))
+    seq, dur, pat, msk, bcnt = batch_reference(db)
+    batch = sorted(zip(pat[msk], seq[msk], dur[msk]))
+    for placement, (triples, cnt, _) in per_placement.items():
+        assert triples == batch, f"{placement} corpus != batch"
+        assert (cnt == bcnt).all(), f"{placement} counts != batch"
+    assert per_placement["host"][0] == per_placement["devices"][0]
+    assert (per_placement["host"][1] == per_placement["devices"][1]).all()
+    assert per_placement["host"][2] == per_placement["devices"][2]
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_devices_placement_equals_host_and_batch(n_shards):
+    rng = np.random.default_rng(500 + n_shards)
+    db = random_dbmart(rng, n_patients=int(rng.integers(4, 12)))
+    seed = int(rng.integers(1 << 30))
+    mesh = make_data_mesh()
+
+    def make_svc(placement):
+        return ShardedStreamService(
+            n_shards=n_shards, placement=placement, mesh=mesh,
+            tick_patients=3, n_buckets_log2=H)
+
+    assert_conformant(db, make_svc, seed)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_devices_placement_under_eviction(n_shards):
+    """Per-shard byte budgets spill/restore on the pinned planes too."""
+    rng = np.random.default_rng(600 + n_shards)
+    db = random_dbmart(rng, n_patients=12, max_events=16)
+
+    def make_svc(placement):
+        return ShardedStreamService(
+            n_shards=n_shards, placement=placement, tick_patients=3,
+            n_buckets_log2=H, budget_bytes=40_000)
+
+    assert_conformant(db, make_svc, 77)
+
+
+def test_devices_placement_kernel_backend():
+    """The Pallas delta kernel runs against device-committed planes."""
+    rng = np.random.default_rng(71)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+
+    def make_svc(placement):
+        return ShardedStreamService(
+            n_shards=2, placement=placement, tick_patients=3,
+            n_buckets_log2=H, backend="kernel", interpret=True)
+
+    assert_conformant(db, make_svc, 13)
+
+
+@pytest.mark.parametrize("placement", ["host", "devices"])
+def test_async_migration_midstream(placement):
+    """Random migrations between ticks, two-phase admission: pending
+    states land at tick boundaries (or on any whole-cohort read) and the
+    final state equals batch regardless of the interleaving."""
+    rng = np.random.default_rng(81)
+    db = random_dbmart(rng, n_patients=10, max_events=14)
+    seq, dur, pat, msk, cnt = batch_reference(db)
+    svc = ShardedStreamService(
+        n_shards=4, placement=placement, async_migration=True,
+        tick_patients=3, n_buckets_log2=H)
+    cursors = np.zeros(db.n_patients, np.int64)
+    for step in range(60):
+        p = int(rng.integers(db.n_patients))
+        lo = int(cursors[p])
+        hi = min(lo + int(rng.integers(1, 3)), int(db.nevents[p]))
+        if hi > lo:
+            svc.submit(p, db.date[p, lo:hi], db.phenx[p, lo:hi])
+            cursors[p] = hi
+        if rng.random() < 0.3:
+            svc.tick()
+        if rng.random() < 0.25 and p in svc.pids:
+            svc.migrate(p, int(rng.integers(4)))
+    for p in range(db.n_patients):
+        lo, hi = int(cursors[p]), int(db.nevents[p])
+        if hi > lo:
+            svc.submit(p, db.date[p, lo:hi], db.phenx[p, lo:hi])
+    svc.run()
+    triples, scnt = corpus_triples(svc)
+    assert triples == sorted(zip(pat[msk], seq[msk], dur[msk]))
+    assert (scnt == cnt).all()
+    assert not svc._pending_keys      # everything landed
+
+
+def test_pending_admit_visible_to_reads():
+    """A snapshot taken between migrate() and the next tick must already
+    see the patient on its new home (reads flush the admit queue), and a
+    second migrate of an in-flight patient lands it first."""
+    svc = ShardedStreamService(n_shards=3, async_migration=True,
+                               tick_patients=4, n_buckets_log2=H)
+    svc.submit(0, np.arange(6, dtype=np.int32), np.zeros(6, np.int32))
+    svc.submit(1, np.arange(4, dtype=np.int32), np.ones(4, np.int32))
+    svc.run()
+    before, cnt_before = corpus_triples(svc)
+
+    src = svc.router.route(0)
+    dst = (src + 1) % 3
+    svc.migrate(0, dst)
+    assert 0 in svc._pending_keys
+    after, cnt_after = corpus_triples(svc)          # flushes
+    assert 0 not in svc._pending_keys
+    assert after == before and (cnt_after == cnt_before).all()
+    assert 0 in svc.shards[dst].store.pids
+
+    # re-migrate while a fresh handoff is parked: flush-then-move
+    svc.migrate(0, src)
+    assert 0 in svc._pending_keys
+    svc.migrate(0, dst)
+    assert svc.router.route(0) == dst
+    final, cnt_final = corpus_triples(svc)
+    assert final == before and (cnt_final == cnt_before).all()
+
+    # a submit to an in-flight patient mines only after its state lands
+    svc.migrate(0, src)
+    svc.submit(0, np.arange(6, 9, dtype=np.int32), np.zeros(3, np.int32))
+    svc.run()
+    assert not svc._pending_keys
+    hist = svc.shards[src].store.history(0)
+    assert len(hist[0]) == 9           # full history on the new home
+
+    # run() with empty queues still lands parked admits: a migrate with
+    # nothing left to mine must not strand the patient off-shard
+    svc.migrate(0, dst)
+    assert 0 in svc._pending_keys
+    assert svc.run() == []
+    assert not svc._pending_keys
+    assert 0 in svc.shards[dst].store.pids
+
+
+@pytest.mark.parametrize("arrival", ["fit", "submit_tick"])
+def test_facade_placement_conformance(arrival):
+    """fit/submit/tick byte-identical between placement='host' and
+    placement='devices' through MiningSession, and vs the batch engine."""
+    from repro.data import dbmart, synthea
+
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=24, avg_events=10, seed=2)
+    db = dbmart.from_rows(pats, dates, phx)
+    mesh = make_data_mesh()
+    frames = {}
+    for placement in ("host", "devices"):
+        session = MiningSession(MiningConfig(
+            engine="sharded", n_shards=2, placement=placement,
+            screen="hash", n_buckets_log2=H, threshold=2,
+            tick_patients=4), mesh=mesh)
+        if arrival == "fit":
+            frame = session.fit(db)
+        else:
+            for p in range(db.n_patients):
+                n = int(db.nevents[p])
+                half = n // 2
+                if half:
+                    session.submit(p, db.date[p, :half], db.phenx[p, :half])
+            session.tick()
+            for p in range(db.n_patients):
+                n, half = int(db.nevents[p]), int(db.nevents[p]) // 2
+                if n > half:
+                    session.submit(p, db.date[p, half:n], db.phenx[p, half:n])
+            frame = session.run()
+        frames[placement] = frame
+    batch = MiningSession(MiningConfig(
+        engine="batch", screen="hash", n_buckets_log2=H, threshold=2)).fit(db)
+    h, d = frames["host"], frames["devices"]
+    # frames canonicalize (mask + lexsort) on access, so equal multisets
+    # mean elementwise-equal arrays across all three engines
+    for ha, da, ba in zip(h.arrays(), d.arrays(), batch.arrays()):
+        assert (np.asarray(ha) == np.asarray(da)).all()
+        assert (np.asarray(ha) == np.asarray(ba)).all()
+    assert (h._corpus.counts() == d._corpus.counts()).all()
+    assert (h._corpus.counts() == batch._corpus.counts()).all()
+    assert h.screen().n_kept == d.screen().n_kept == batch.screen().n_kept
+
+
+def test_multi_device_placement_conformance():
+    """Real one-shard-per-device pinning: a fresh interpreter with 4
+    forced host devices replays host vs devices (with a mid-stream async
+    migration) and requires byte-identical corpus + counts + screen."""
+    script = textwrap.dedent("""
+        import numpy as np, jax
+        assert len(jax.devices()) == 4, jax.devices()
+        from tests.conftest import random_dbmart
+        from tests.test_stream import H, batch_reference, replay
+        from tests.test_stream_sharded import sharded_triples
+        from repro.launch.mesh import make_data_mesh
+        from repro.stream.shard import ShardedStreamService
+
+        rng = np.random.default_rng(11)
+        db = random_dbmart(rng, n_patients=10, max_events=14)
+        mesh = make_data_mesh()
+        out = {}
+        for placement in ("host", "devices"):
+            svc = ShardedStreamService(n_shards=4, placement=placement,
+                                       mesh=mesh, tick_patients=3,
+                                       n_buckets_log2=H)
+            replay(db, svc, np.random.default_rng(3))
+            svc.migrate(next(iter(svc.pids)), 2)
+            snap, keys = sharded_triples(svc)
+            out[placement] = (sorted(zip(keys, snap.seq, snap.dur)),
+                              np.asarray(snap.counts),
+                              int(np.asarray(svc.screened_keep(2)).sum()))
+        if out["devices"][0] != out["host"][0]:
+            raise SystemExit("corpus mismatch across placements")
+        if not (out["devices"][1] == out["host"][1]).all():
+            raise SystemExit("counts mismatch across placements")
+        if out["devices"][2] != out["host"][2]:
+            raise SystemExit("screen mismatch across placements")
+        seq, dur, pat, msk, cnt = batch_reference(db)
+        if out["devices"][0] != sorted(zip(pat[msk], seq[msk], dur[msk])):
+            raise SystemExit("corpus mismatch vs batch")
+        if not (out["devices"][1] == cnt).all():
+            raise SystemExit("counts mismatch vs batch")
+        print("placement-4dev-ok")
+    """)
+    env = dict(os.environ)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(repo, "src"), repo,
+                    env.get("PYTHONPATH", "")] if p)
+    proc = subprocess.run([sys.executable, "-c", script], cwd=repo, env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "placement-4dev-ok" in proc.stdout
