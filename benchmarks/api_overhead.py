@@ -101,7 +101,14 @@ def api_overhead(n_patients=400, avg_events=40, threshold=4, repeats=15,
     plan_ts, plan_outs = _best_times(
         {"plan": lambda: MiningSession(config).plan(db)}, max(repeats, 20))
     plan_s, plan = plan_ts["plan"], plan_outs["plan"]
+
+    # telemetry snapshot for the artifact: one extra fit outside the timed
+    # paths (the timed sessions above all run telemetry-disabled)
+    tel_session = MiningSession(config.replace(
+        engine="stream", telemetry=True))
+    tel_session.fit(db)
     return {
+        "telemetry": tel_session.metrics(),
         "patients": n_patients, "avg_events": avg_events,
         "threshold": threshold, "backend": backend, "repeats": repeats,
         "engine": plan.engine, "corpus_rows": len(frame),

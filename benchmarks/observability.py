@@ -1,0 +1,134 @@
+"""Telemetry overhead — instrumented vs bare streaming ingest.
+
+The observability layer (repro.obs: metrics registry, span tracer,
+device-timed busy windows) rides the per-tick hot path, so it carries an
+acceptance bar: enabling telemetry must cost **< 3%** ingest wall time and
+must not change a single mined byte.  This suite replays one cohort
+through the stream engine twice per round — telemetry off, telemetry on —
+interleaved best-of-N (same discipline as benchmarks/api_overhead), then
+asserts both bars and reports what the instrumented run recorded.
+
+Whole-run walls on a shared host jitter by +-10% and more — far above
+the ~13 us/tick the instrumentation actually costs — so the measurement
+leans on three noise controls: GC is disabled inside the timed region,
+rounds are *paired* (each round times off then on back-to-back, so both
+legs of a pair share the ambient load), and the reported figure is the
+**median of the paired per-round ratios**.  Per-side best-of-N is the
+wrong estimator here: the two minima sample independent luck, so one
+fortunate off-round reads as several percent of phantom overhead (or
+speedup) regardless of repeats; the paired median is immune to any
+minority of contaminated rounds.
+
+Prints ``name,us_per_call,derived`` CSV rows; ``main(json_path=...)``
+writes BENCH_observability_overhead.json (gated in ci.yml).
+"""
+from __future__ import annotations
+
+import gc
+import json
+import time
+
+import numpy as np
+
+from repro.api import MiningConfig, MiningSession
+from repro.data import dbmart, synthea
+from repro.launch.stream import replay_waves
+
+#: The acceptance ceiling: telemetry-on ingest may cost at most this
+#: fraction over telemetry-off (ci.yml gates the stored artifact on it).
+OVERHEAD_CEILING = 0.03
+
+
+def _replay(db, config, n_waves, seed):
+    session = MiningSession(config)
+    gc.collect()
+    gcold = gc.isenabled()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        for _ in replay_waves(db, session, n_waves, seed):
+            session.service.run()
+        dt = time.perf_counter() - t0
+    finally:
+        if gcold:
+            gc.enable()
+    return session, dt
+
+
+def observability_overhead(n_patients=120, avg_events=16, n_waves=4,
+                           tick_patients=16, repeats=12, seed=11,
+                           backend="jnp"):
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=n_patients, avg_events=avg_events, seed=seed)
+    db = dbmart.from_rows(pats, dates, phx)
+    base = MiningConfig(engine="stream", tick_patients=tick_patients,
+                        backend=backend, n_buckets_log2=18, screen="hash")
+
+    # warm the jit caches once so neither side pays first-compile; the
+    # slab shapes repeat across replays, so rounds after this are warm
+    _replay(db, base, n_waves, seed)
+    _replay(db, base.replace(telemetry=True), n_waves, seed)
+
+    times = {"off": [], "on": []}
+    sessions = {}
+    pair = (("off", base), ("on", base.replace(telemetry=True)))
+    for r in range(repeats):
+        # alternate within-pair order: whichever leg runs first in a pair
+        # absorbs any cache-cooling cost, so a fixed order would bias the
+        # paired ratio one way
+        for tag, cfg in (pair if r % 2 == 0 else pair[::-1]):
+            sessions[tag], dt = _replay(db, cfg, n_waves, seed)
+            times[tag].append(dt)
+    ratios = [on / max(off, 1e-12) - 1.0
+              for off, on in zip(times["off"], times["on"])]
+    overhead = float(np.median(ratios))
+    off_s = float(np.min(times["off"]))
+    on_s = float(np.min(times["on"]))
+
+    # exactness: telemetry must never change mined bytes
+    f_off = sessions["off"].frame()
+    f_on = sessions["on"].frame()
+    for a, b in zip(f_off.arrays(), f_on.arrays()):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "telemetry changed mined results"
+    assert overhead < OVERHEAD_CEILING, \
+        f"telemetry overhead {overhead * 100:.2f}% exceeds the " \
+        f"{OVERHEAD_CEILING * 100:.0f}% ceiling"
+
+    snap = sessions["on"].metrics()
+    tick_summary = snap.get("stream.tick.dispatch_s", {})
+    return {
+        "patients": n_patients, "avg_events": avg_events, "waves": n_waves,
+        "backend": backend, "repeats": repeats,
+        "off_s": off_s, "on_s": on_s,
+        "overhead_frac": overhead,
+        "overhead_ceiling": OVERHEAD_CEILING,
+        "ticks": snap.get("stream.ticks", 0),
+        "trace_events":
+            len(sessions["on"].trace().to_chrome_trace()["traceEvents"]),
+        "tick_dispatch_summary": tick_summary,
+        "telemetry": snap,
+    }
+
+
+def main(small=True, json_path=None, backend="jnp"):
+    kw = dict() if small else dict(n_patients=400, avg_events=32, n_waves=6,
+                                   repeats=15)
+    r = observability_overhead(backend=backend, **kw)
+    print("name,us_per_call,derived")
+    print(f"observability/ingest_off,{r['off_s']*1e6:.0f},"
+          f"ticks={r['ticks']}")
+    print(f"observability/ingest_on,{r['on_s']*1e6:.0f},"
+          f"overhead={r['overhead_frac']*100:+.2f}% "
+          f"(ceiling {r['overhead_ceiling']*100:.0f}%)")
+    print(f"observability/trace,,events={r['trace_events']};"
+          f"metric_keys={len(r['telemetry'])};exactness_ok=1")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"observability/artifact,,{json_path}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

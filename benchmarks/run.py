@@ -26,6 +26,11 @@
                      mine->flatten->screen; batch-path dispatch overhead
                      must stay < 5% (``--suite api_overhead`` writes
                      BENCH_api_overhead.json)
+  observability_overhead -> telemetry-instrumented vs bare streaming
+                     ingest; enabling the metrics registry + span tracer
+                     must cost < 3% and change zero mined bytes
+                     (``--suite observability_overhead`` writes
+                     BENCH_observability_overhead.json)
 
 An unknown ``--suite`` prints the available suites instead of failing
 opaquely.  Prints ``name,us_per_call,derived`` CSV rows.
@@ -151,6 +156,13 @@ def api_overhead_bench(small=True, out_path=None):
     api_overhead.main(small=small, json_path=out_path, backend="jnp")
 
 
+def observability_overhead_bench(small=True, out_path=None):
+    from benchmarks import observability
+
+    out_path = out_path or "BENCH_observability_overhead.json"
+    observability.main(small=small, json_path=out_path, backend="jnp")
+
+
 SUITES = {
     "streaming": ("streaming ingest (delta vs re-mine)", streaming_bench),
     "streaming_sharded": ("mesh-sharded streaming (shards vs single)",
@@ -161,6 +173,8 @@ SUITES = {
                             streaming_placement_bench),
     "api_overhead": ("session façade vs hand-wired batch path",
                      api_overhead_bench),
+    "observability_overhead": ("telemetry on/off ingest (< 3% ceiling)",
+                               observability_overhead_bench),
 }
 
 

@@ -37,7 +37,7 @@ def one_cohort(n_patients=300, avg_events=32, n_waves=8, tick_patients=16,
     # (store residency, per-tick stats) through session.service
     session = MiningSession(MiningConfig(
         tick_patients=tick_patients, backend=backend, n_buckets_log2=18,
-        screen="hash"))
+        screen="hash", telemetry=True))
 
     waves = []
     for w in replay_waves(db, session, n_waves, seed):
@@ -84,6 +84,7 @@ def one_cohort(n_patients=300, avg_events=32, n_waves=8, tick_patients=16,
         "ingest_s": total_s, "full_remine_s": remine_s,
         "delta_pairs_total": sum(w["delta_pairs"] for w in waves),
         "remine_pairs_final": int(mining.count_sequences(db.nevents)),
+        "telemetry": session.metrics(),
     }
 
 
@@ -103,6 +104,7 @@ def sharded_cohort(n_patients=120, avg_events=24, n_waves=6,
     db = dbmart.from_rows(pats, dates, phx)
     mesh = make_data_mesh()
     rows = []
+    metrics = {}
     for n_shards in shard_counts:
         router = ShardRouter.balanced(
             list(range(db.n_patients)), np.asarray(db.nevents), n_shards)
@@ -110,15 +112,20 @@ def sharded_cohort(n_patients=120, avg_events=24, n_waves=6,
         # through the sharded service (merged-table screen) for the sweep
         session = MiningSession(MiningConfig(
             engine="sharded", n_shards=n_shards, tick_patients=tick_patients,
-            backend=backend, n_buckets_log2=18, screen="hash"),
-            mesh=mesh, router=router)
+            backend=backend, n_buckets_log2=18, screen="hash",
+            telemetry=True), mesh=mesh, router=router)
         t0 = time.perf_counter()
         for _ in replay_waves(db, session, n_waves, seed):
             session.service.run()
         svc = session.service
         ingest_s = time.perf_counter() - t0
-        per_shard_s = [sum(t.wall_s for t in s.stats) for s in svc.shards]
+        # busy = dispatch + device + collect, the non-double-counting
+        # decomposition of a tick (wall_s spans begin->finish and would
+        # overstate busy under overlapped dispatch)
+        per_shard_s = [sum(t.dispatch_s + t.device_s + t.collect_s
+                           for t in s.stats) for s in svc.shards]
         events = sum(t.n_events for t in svc.stats)
+        metrics[f"shards{n_shards}"] = session.metrics()
 
         t0 = time.perf_counter()
         keep = svc.screened_keep(threshold)   # merged table + global mask
@@ -149,6 +156,7 @@ def sharded_cohort(n_patients=120, avg_events=24, n_waves=6,
         "projected_speedup_vs_single": [
             single["projected_parallel_s"] / max(r["projected_parallel_s"],
                                                  1e-9) for r in rows],
+        "telemetry": metrics,
     }
 
 
@@ -189,6 +197,7 @@ def placement_cohort(n_patients=120, avg_events=24, n_waves=6,
     oracle = sorted(zip(pat[msk], seq[msk], dur[msk]))
 
     rows = {}
+    metrics = {}
     for placement in ("host", "devices"):
         def one_replay():
             router = ShardRouter.balanced(
@@ -196,20 +205,21 @@ def placement_cohort(n_patients=120, avg_events=24, n_waves=6,
             session = MiningSession(MiningConfig(
                 engine="sharded", n_shards=n_shards, placement=placement,
                 tick_patients=tick_patients, backend=backend,
-                n_buckets_log2=n_buckets_log2, screen="hash"),
-                mesh=mesh, router=router)
+                n_buckets_log2=n_buckets_log2, screen="hash",
+                telemetry=True), mesh=mesh, router=router)
             t0 = time.perf_counter()
             for _ in replay_waves(db, session, n_waves, seed):
                 session.service.run()
-            return session.service, time.perf_counter() - t0
+            return session, session.service, time.perf_counter() - t0
 
         # warmup replay compiles every slab shape for this placement's
         # devices (the jit cache persists across sessions), so the timed
         # replay measures tick dispatch + mining, not XLA compilation —
         # at toy scale a cold run is retrace-dominated on every path
         one_replay()
-        svc, ingest_s = one_replay()
+        session, svc, ingest_s = one_replay()
         events = sum(t.n_events for t in svc.stats)
+        metrics[placement] = session.metrics()
 
         snap = svc.snapshot()
         p2k = svc.pid_to_key()
@@ -228,11 +238,22 @@ def placement_cohort(n_patients=120, avg_events=24, n_waves=6,
             # per-tick walls span tick_begin -> tick_finish; under
             # 'devices' every shard is dispatched before any is
             # collected, so these windows overlap and their sum
-            # overstates busy time — the serial ingest wall above is the
-            # comparable figure, this column only shows the overlap
+            # overstates busy time — kept only to show the overlap
+            # (summed walls > elapsed).  The corrected decomposition is
+            # the dispatch/device/collect split: host dispatch and
+            # collect are serial (their sums never double-count) and
+            # device_s is completion-timed device busy per shard — the
+            # same signal shard_load() polls
             "per_shard_tick_wall_s": [sum(t.wall_s for t in s.stats)
                                       for s in svc.shards],
             "tick_walls_overlap": placement == "devices",
+            "per_shard_dispatch_s": [sum(t.dispatch_s for t in s.stats)
+                                     for s in svc.shards],
+            "per_shard_collect_s": [sum(t.collect_s for t in s.stats)
+                                    for s in svc.shards],
+            "per_shard_device_s": [sum(t.device_s for t in s.stats)
+                                   for s in svc.shards],
+            "shard_busy_frac": svc.shard_load(),
             "shard_devices": [str(d) for d in svc.devices],
             "kept": int(svc.screened_keep(threshold).sum()),
             "corpus": int(len(snap.seq)),
@@ -248,6 +269,7 @@ def placement_cohort(n_patients=120, avg_events=24, n_waves=6,
         "exactness": "device == host == batch oracle (corpus + counts)",
         "speedup_devices_vs_host": rows["host"]["ingest_s"]
         / max(rows["devices"]["ingest_s"], 1e-9),
+        "telemetry": metrics,
     }
 
 
@@ -318,16 +340,20 @@ def rebalance_cohort(n_light=90, n_heavy=10, light_events=8,
             rebalance_every=rebalance_every if rebalance else None,
             imbalance_threshold=imbalance_threshold,
             tick_patients=tick_patients, backend=backend, n_buckets_log2=18,
-            screen="hash"), router=router)
+            screen="hash", telemetry=True), router=router)
         t0 = time.perf_counter()
         for _ in replay_waves(db, session, n_waves, seed):
             session.service.run()
         svc = session.service
         ingest_s = time.perf_counter() - t0
-        busy = [sum(t.wall_s for t in s.stats) for s in svc.shards]
+        # dispatch + device + collect: the non-overlapping tick split
+        # (wall_s double-counts under overlapped dispatch)
+        busy = [sum(t.dispatch_s + t.device_s + t.collect_s
+                    for t in s.stats) for s in svc.shards]
         events = sum(t.n_events for t in svc.stats)
         parallel = max(busy, default=0.0)
         return {
+            "telemetry": session.metrics(),
             "events": events,
             "ticks": len(svc.stats),
             "ingest_s": ingest_s,

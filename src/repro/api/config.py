@@ -63,6 +63,11 @@ class MiningConfig:
     rebalance_every: int | None = None   # auto-rebalance period (ticks)
     imbalance_threshold: float = 1.5     # hot-shard trigger (x mean load)
     min_gain: float = 0.05               # migration hysteresis (x mean load)
+    busy_weighted_rebalance: bool = False  # weight LPT by shard_load()
+
+    # --- observability ------------------------------------------------------
+    telemetry: bool = False         # metrics registry + span tracer (repro.obs)
+    jax_annotations: bool = False   # mirror spans into jax.profiler traces
 
     def __post_init__(self):
         if self.codec not in CODECS:

@@ -25,6 +25,7 @@ import tempfile
 
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.api import planner
 from repro.api.config import MiningConfig, Plan
 from repro.api.frame import SequenceFrame
@@ -52,6 +53,9 @@ class MiningSession:
         self.mesh = mesh
         self.router = router
         self.vocab = vocab
+        self.telemetry = (obs_lib.Telemetry(
+            jax_annotations=self.config.jax_annotations)
+            if self.config.telemetry else obs_lib.NOOP)
         self.service: StreamService | ShardedStreamService | None = None
         self.last_plan: Plan | None = None
         self.last_frame: SequenceFrame | None = None
@@ -75,7 +79,9 @@ class MiningSession:
         plan = planner.make_plan(self.config, db.nevents)
         self.last_plan = plan
         fit = getattr(self, f"_fit_{plan.engine}")
-        self.last_frame = fit(db)
+        with self.telemetry.tracer.span("session.fit", cat="host",
+                                        engine=plan.engine):
+            self.last_frame = fit(db)
         return self.last_frame
 
     def _frame(self, seq, dur, patient, mask=None, counts=None,
@@ -200,14 +206,46 @@ class MiningSession:
                   backend=c.backend, n_buckets_log2=c.n_buckets_log2,
                   budget_bytes=c.budget_bytes, fuse_duration=c.fuse_duration,
                   bucket_days=c.bucket_days, max_slot_events=c.max_slot_events)
+        tel = self.telemetry if self.telemetry.enabled else None
         if not sharded:
-            return StreamService(**kw)
+            return StreamService(telemetry=tel, **kw)
         return ShardedStreamService(
             n_shards=c.n_shards, router=router, mesh=self.mesh,
             rebalance_every=c.rebalance_every,
             imbalance_threshold=c.imbalance_threshold,
             min_gain=c.min_gain,
-            placement=planner.resolve_placement(c), **kw)
+            busy_weighted_rebalance=c.busy_weighted_rebalance,
+            placement=planner.resolve_placement(c), telemetry=tel, **kw)
+
+    # --- observability ------------------------------------------------------
+    def metrics(self) -> dict:
+        """Flat snapshot of every telemetry metric (``name{labels}`` ->
+        value, histograms as summary dicts).  Snapshot-time gauges (plane
+        bytes, occupancy, sketch load factor, queue depths) are refreshed
+        from the live service first.  Requires ``MiningConfig(telemetry=True)``."""
+        if not self.telemetry.enabled:
+            raise RuntimeError("telemetry is disabled; build the session "
+                               "with MiningConfig(telemetry=True)")
+        if self.service is not None:
+            self.service.sample_metrics()
+        return self.telemetry.metrics.snapshot()
+
+    def trace(self):
+        """The session's :class:`~repro.obs.SpanTracer` (span trees over
+        ticks, shards, migrations; export with ``to_chrome_trace()`` /
+        ``dump_chrome_trace(path)``).  Requires ``MiningConfig(telemetry=True)``."""
+        if not self.telemetry.enabled:
+            raise RuntimeError("telemetry is disabled; build the session "
+                               "with MiningConfig(telemetry=True)")
+        return self.telemetry.tracer
+
+    def shard_load(self) -> list[float]:
+        """Device-timed busy fraction per shard since the last poll
+        (sharded engine only; see ShardedStreamService.shard_load)."""
+        svc = self.service
+        if not isinstance(svc, ShardedStreamService):
+            raise RuntimeError("shard_load() needs a live sharded service")
+        return svc.shard_load()
 
     def _snap_frame(self, svc, vocab=None, n_patients=None) -> SequenceFrame:
         snap = svc.snapshot()

@@ -74,11 +74,23 @@ def main(argv=None):
                     help="migration hysteresis: skip moves that lower the "
                          "hot shard's load by less than this fraction of "
                          "the mean (prevents patient ping-pong)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="enable telemetry and dump the metrics snapshot "
+                         "(flat name{labels} -> value JSON) on exit")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable telemetry and dump the span tree as a "
+                         "Chrome trace (chrome://tracing / Perfetto) on exit")
+    ap.add_argument("--busy-weighted-rebalance", action="store_true",
+                    help="weight LPT rebalancing by the device-timed "
+                         "shard_load() busy fractions")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.rebalance_every and args.shards <= 1:
         ap.error("--rebalance-every requires --shards > 1 "
                  "(rebalancing migrates patients between shards)")
+    if args.busy_weighted_rebalance and not args.rebalance_every:
+        ap.error("--busy-weighted-rebalance requires --rebalance-every")
+    telemetry = bool(args.metrics_json or args.trace_out)
 
     pats, dates, phx, _ = synthea.generate_cohort(
         n_patients=args.patients, avg_events=args.avg_events, seed=args.seed)
@@ -92,7 +104,8 @@ def main(argv=None):
         placement=args.placement,
         rebalance_every=args.rebalance_every or None,
         imbalance_threshold=args.imbalance_threshold,
-        min_gain=args.min_gain)
+        min_gain=args.min_gain, telemetry=telemetry,
+        busy_weighted_rebalance=args.busy_weighted_rebalance)
     mesh = None
     router = None
     if args.shards > 1:
@@ -129,8 +142,20 @@ def main(argv=None):
           f"{len(svc.stats)} ticks in {dt:.2f}s ({ev/dt:,.0f} events/s)")
     if args.shards > 1:
         loads = svc.shard_loads()
+        busy = svc.shard_load()
         print(f"migrations={len(svc.migrations)} shard_load_mb=" +
-              "/".join(f"{b / (1 << 20):.1f}" for b in loads))
+              "/".join(f"{b / (1 << 20):.1f}" for b in loads) +
+              " shard_busy=" + "/".join(f"{f:.2f}" for f in busy))
+
+    if args.metrics_json:
+        import json
+
+        with open(args.metrics_json, "w") as fh:
+            json.dump(session.metrics(), fh, indent=2, sort_keys=True)
+        print(f"metrics snapshot -> {args.metrics_json}")
+    if args.trace_out:
+        session.trace().dump_chrome_trace(args.trace_out)
+        print(f"chrome trace -> {args.trace_out}")
 
     frame = session.frame()
     covid = db.vocab.phenx_index[synthea.COVID]

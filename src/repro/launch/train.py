@@ -16,6 +16,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.configs import get_config
 from repro.data import synthea, tokenize
 from repro.data.dbmart import from_rows
@@ -38,6 +39,8 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--patients", type=int, default=256)
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the training metrics snapshot as JSON on exit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -75,6 +78,17 @@ def main(argv=None):
     guard = elastic.PreemptionGuard()
     watchdog = elastic.StepWatchdog()
     batches = tokenize.lm_batches(corpus, args.batch, seed=args.seed)
+    # training observability goes through the same registry as the mining
+    # stack (repro.obs), not hand-rolled prints: the log line below and the
+    # --metrics-json snapshot read from one source of truth
+    tel = obs_lib.Telemetry()
+    reg = tel.metrics
+    m_steps = reg.counter("train.steps")
+    m_stragglers = reg.counter("train.stragglers")
+    m_loss = reg.gauge("train.loss")
+    m_ce = reg.gauge("train.ce")
+    m_lr = reg.gauge("train.lr")
+    m_step_s = reg.histogram("train.step_s")
     t0 = time.time()
     for step in range(start, args.steps):
         if guard.preempted:
@@ -84,19 +98,38 @@ def main(argv=None):
             return state
         batch = {k: jax.numpy.asarray(v) for k, v in next(batches).items()}
         watchdog.start()
+        ts = time.perf_counter()
         state, metrics = step_fn(state, batch)
         slow = watchdog.stop(step)
+        m_step_s.observe(time.perf_counter() - ts)
+        m_steps.inc()
+        if slow:
+            m_stragglers.inc()
+        m_loss.set(float(metrics["loss"]))
+        m_ce.set(float(metrics["ce"]))
+        m_lr.set(float(metrics["lr"]))
         if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"step {step}: loss={float(metrics['loss']):.4f} "
-                  f"ce={float(metrics['ce']):.4f} "
-                  f"lr={float(metrics['lr']):.2e}"
+            print(f"step {step}: loss={m_loss.value:.4f} "
+                  f"ce={m_ce.value:.4f} "
+                  f"lr={m_lr.value:.2e}"
                   + (" [straggler]" if slow else ""), flush=True)
         if args.ckpt_dir and step and step % args.ckpt_every == 0:
             checkpoint.save_async(args.ckpt_dir, step, state)
     checkpoint.wait()
     if args.ckpt_dir:
         checkpoint.save(args.ckpt_dir, args.steps, state)
-    print(f"done in {time.time()-t0:.1f}s")
+    snap = reg.snapshot()
+    if args.metrics_json:
+        import json
+
+        with open(args.metrics_json, "w") as fh:
+            json.dump(snap, fh, indent=2, sort_keys=True)
+        print(f"metrics snapshot -> {args.metrics_json}")
+    step_sum = snap.get("train.step_s", {})
+    print(f"done in {time.time()-t0:.1f}s "
+          f"({snap['train.steps']} steps, "
+          f"{snap['train.stragglers']} stragglers, "
+          f"mean step {step_sum.get('sum', 0.0) / max(snap['train.steps'], 1):.3f}s)")
     return state
 
 

@@ -1,0 +1,112 @@
+"""Telemetry session: one registry + one tracer + the retrace tracker.
+
+A :class:`Telemetry` object is the unit the mining stack threads around:
+``MiningSession`` builds one when ``MiningConfig.telemetry`` is set and
+hands the *same* object to every layer it constructs (sharded service,
+per-shard services, their stores and sketches), so a whole session's
+counters land in one registry and its spans on one timeline.  Disabled
+telemetry is the :data:`NOOP` singleton — same attribute surface, no
+recording, no per-call allocation — so instrumented code never branches.
+
+:class:`RetraceTracker` measures the invariant everything else only
+promises: the streaming hot path retraces O(log) times (geometric
+capacity growth in the store and sketch quantizes every jitted shape),
+not per tick.  jax exposes compiled-variant counts per jitted callable
+(``_cache_size``); the tracker samples their sum and yields deltas, so a
+service can increment a ``jit.retraces`` counter with exactly the new
+compilations each tick caused.  The hot-path jit caches are process-wide,
+so a sharded service shares ONE tracker across its shards — per-shard
+trackers would each see (and double-count) the same global delta.
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import MetricsRegistry, NOOP_REGISTRY
+from repro.obs.trace import NOOP_TRACER, SpanTracer
+
+
+def default_hot_functions() -> tuple:
+    """The streaming ingest step's jitted callables (lazy import: obs
+    must not import the stream package at module load)."""
+    from repro.stream import counts as counts_lib
+    from repro.stream import delta as delta_lib
+    from repro.stream import store as store_lib
+
+    return (store_lib._append_step, counts_lib.sketch_update,
+            delta_lib.delta_mine_jnp)
+
+
+def jit_cache_size(fns) -> int:
+    """Total compiled-variant count over jitted callables (0 for any that
+    predate / postdate the private ``_cache_size`` API)."""
+    total = 0
+    for fn in fns:
+        size = getattr(fn, "_cache_size", None)
+        if size is not None:
+            try:
+                total += int(size())
+            except Exception:
+                pass
+    return total
+
+
+class RetraceTracker:
+    """Delta sampler over the hot-path jit caches.
+
+    ``sample()`` returns compilations since the previous sample (clamped
+    at zero: caches can be cleared externally) — call it once per tick
+    and feed the delta to a counter.  The baseline is taken at
+    construction, so compilations from *before* this service existed are
+    never charged to it.
+    """
+
+    def __init__(self, fns=None):
+        self.fns = tuple(fns) if fns is not None else default_hot_functions()
+        self._last = jit_cache_size(self.fns)
+
+    def total(self) -> int:
+        return jit_cache_size(self.fns)
+
+    def sample(self) -> int:
+        now = jit_cache_size(self.fns)
+        delta = max(0, now - self._last)
+        self._last = now
+        return delta
+
+
+class Telemetry:
+    """One telemetry session: ``.metrics`` registry + ``.tracer`` spans.
+
+    ``jax_annotations`` forwards to the tracer: spans additionally enter
+    ``jax.profiler.TraceAnnotation`` so they interleave with XLA's
+    timeline inside an active ``jax.profiler.trace`` capture."""
+
+    enabled = True
+
+    def __init__(self, jax_annotations: bool = False):
+        self.metrics = MetricsRegistry()
+        self.tracer = SpanTracer(jax_annotations=jax_annotations)
+
+    def snapshot(self) -> dict:
+        return self.metrics.snapshot()
+
+    def reset(self) -> None:
+        self.metrics.reset()
+        self.tracer.reset()
+
+
+class _NoopTelemetry:
+    """Disabled telemetry: the same surface, nothing recorded."""
+
+    __slots__ = ()
+    enabled = False
+    metrics = NOOP_REGISTRY
+    tracer = NOOP_TRACER
+
+    def snapshot(self) -> dict:
+        return {}
+
+    def reset(self) -> None:
+        pass
+
+
+NOOP = _NoopTelemetry()

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.core import sparsity
 from repro.core.encoding import SENTINEL
 
@@ -78,7 +79,7 @@ class OnlineSupportSketch:
     scatters stay on that device."""
 
     def __init__(self, n_buckets_log2: int = 20, pad_multiple: int = 64,
-                 device=None):
+                 device=None, telemetry=None, labels: dict | None = None):
         self.n_buckets_log2 = n_buckets_log2
         self.pad_multiple = pad_multiple
         self.device = device
@@ -88,6 +89,13 @@ class OnlineSupportSketch:
         if device is not None:
             self.counts = jax.device_put(self.counts, device)
             self.seqset = jax.device_put(self.seqset, device)
+        self.obs = telemetry if telemetry is not None else obs_lib.NOOP
+        lbl = labels or {}
+        m = self.obs.metrics
+        self._m_novel = m.counter("sketch.novel_ids", **lbl)
+        self._m_growths = m.counter("sketch.plane_growths", **lbl)
+        self._m_load = m.gauge("sketch.bucket_load_factor", **lbl)
+        self._m_cols = m.gauge("sketch.set_columns", **lbl)
 
     @property
     def n_patients(self) -> int:
@@ -112,6 +120,7 @@ class OnlineSupportSketch:
         self.seqset = jnp.pad(
             self.seqset, ((0, 0), (0, need - self.seqset.shape[1])),
             constant_values=SENTINEL)
+        self._m_growths.inc()
 
     def update(self, pids, seq, mask) -> int:
         """Fold a tick's delta slab rows into the table; returns #novel ids.
@@ -148,7 +157,19 @@ class OnlineSupportSketch:
             merged = jnp.pad(merged, ((0, 0), (0, C - merged.shape[1])),
                              constant_values=SENTINEL)
         self.seqset = self.seqset.at[pids].set(merged[:, :C])
-        return int(np.asarray(pending.n_novel).sum())
+        n_novel = int(np.asarray(pending.n_novel).sum())
+        self._m_novel.inc(n_novel)
+        return n_novel
+
+    def sample_metrics(self) -> None:
+        """Snapshot-time gauges: bucket load factor (occupied / 2^H — one
+        device->host table copy, so never sampled per tick) and the
+        per-patient set plane width."""
+        if not self.obs.enabled:
+            return
+        table = np.asarray(self.counts)
+        self._m_load.set(float(np.count_nonzero(table)) / max(len(table), 1))
+        self._m_cols.set(int(self.seqset.shape[1]))
 
     # --- migration handoff --------------------------------------------------
     def _bucket_transfer(self, ids: np.ndarray, sign: int) -> None:

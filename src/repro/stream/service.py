@@ -27,11 +27,20 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.core import queries as queries_lib
 from repro.core import sparsity
 from repro.stream import counts as counts_lib
 from repro.stream import delta as delta_lib
 from repro.stream.store import PatientStore
+
+
+def _pow2_bucket(n: int, pad_multiple: int) -> int:
+    """Smallest power-of-two multiple of ``pad_multiple`` >= n."""
+    w = pad_multiple
+    while w < n:
+        w *= 2
+    return w
 
 
 @dataclasses.dataclass
@@ -59,7 +68,19 @@ class TickStats:
     n_patients: int
     n_events: int
     n_pairs: int          # new pairs mined this tick (Delta * n work)
-    wall_s: float
+    wall_s: float         # begin-to-finish; concurrently-pending ticks on
+                          # other shards overlap inside it, so summed
+                          # per-shard walls exceed real elapsed time —
+                          # sum dispatch_s + collect_s instead
+    dispatch_s: float = 0.0   # host work in tick_begin (wave assembly +
+                              # async enqueue); never overlaps (host-serial)
+    collect_s: float = 0.0    # host work in tick_finish after the device
+                              # completed; never overlaps (host-serial)
+    device_s: float = 0.0     # dispatch-end -> completion-read of the
+                              # tick's last enqueued device computation:
+                              # the device-timed busy signal (an upper
+                              # bound — a result collected late reads as
+                              # busy through its idle tail)
 
 
 @dataclasses.dataclass
@@ -79,6 +100,8 @@ class PendingTick:
     t0: float   # begin time; the resulting TickStats.wall_s spans
                 # begin-to-finish, so concurrently-pending ticks on other
                 # shards overlap inside it (sum != aggregate busy time)
+    t_disp: float = 0.0           # dispatch-end time (tick_begin return)
+    span_device: object = None    # open obs device span (dispatch->ready)
 
 
 @dataclasses.dataclass
@@ -137,7 +160,8 @@ class StreamService(SnapshotQueries):
                  n_buckets_log2: int = 20, budget_bytes: int | None = None,
                  pad_multiple: int = 8, fuse_duration: bool = False,
                  bucket_days: int = 30, max_slot_events: int = 512,
-                 device=None):
+                 device=None, telemetry=None, shard_tag: int | None = None,
+                 retrace_tracker=None):
         self.tick_patients = tick_patients
         self.max_slot_events = max_slot_events
         self.codec = codec
@@ -146,14 +170,36 @@ class StreamService(SnapshotQueries):
         self.fuse_duration = fuse_duration
         self.bucket_days = bucket_days
         self.device = device
+        self.obs = telemetry if telemetry is not None else obs_lib.NOOP
+        self.track = "stream" if shard_tag is None else f"shard{shard_tag}"
+        labels = {} if shard_tag is None else {"shard": shard_tag}
         self.store = PatientStore(pad_multiple=pad_multiple,
-                                  budget_bytes=budget_bytes, device=device)
+                                  budget_bytes=budget_bytes, device=device,
+                                  telemetry=self.obs, labels=labels)
         self.sketch = counts_lib.OnlineSupportSketch(n_buckets_log2,
-                                                     device=device)
+                                                     device=device,
+                                                     telemetry=self.obs,
+                                                     labels=labels)
         self.queue: deque[Delta] = deque()
         self._corpus: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
         self._snap: Snapshot | None = None   # cache, invalidated per tick
         self.stats: list[TickStats] = []
+        # a sharded service shares one tracker across shards (the jit
+        # caches are process-global; per-shard trackers would each count
+        # the same compilation)
+        self._retrace = retrace_tracker if retrace_tracker is not None \
+            else (obs_lib.RetraceTracker() if self.obs.enabled else None)
+        # metric objects resolved once; per-tick cost is inc/observe only
+        m = self.obs.metrics
+        self._labels = labels
+        self._m_ticks = m.counter("stream.ticks", **labels)
+        self._m_events = m.counter("stream.events", **labels)
+        self._m_pairs = m.counter("stream.pairs", **labels)
+        self._m_retraces = m.counter("jit.retraces", **labels)
+        self._m_dispatch = m.histogram("stream.tick.dispatch_s", **labels)
+        self._m_collect = m.histogram("stream.tick.collect_s", **labels)
+        self._m_device = m.histogram("stream.tick.device_s", **labels)
+        self._m_queue = m.gauge("stream.queue_depth", **labels)
 
     # --- ingest -------------------------------------------------------------
     def submit(self, key, dates, phenx) -> None:
@@ -222,9 +268,15 @@ class StreamService(SnapshotQueries):
         if not wave:
             return None
         t0 = time.perf_counter()
+        sp = self.obs.tracer.begin("tick.dispatch", cat="host",
+                                   track=self.track)
         B = len(wave)
         pm = self.store.pad_multiple
-        D = -(-max(len(d.dates) for d in wave) // pm) * pm
+        # slab widths bucket geometrically (powers of two over the pad
+        # multiple), like the store planes: rounding to pad_multiple alone
+        # yields a *linear* family of jit shapes as histories grow —
+        # tests/test_obs.py's retrace budget measures the O(log) promise
+        D = _pow2_bucket(max(len(d.dates) for d in wave), pm)
         new_phenx = np.zeros((B, D), np.int32)
         new_date = np.zeros((B, D), np.int32)
         n_new = np.zeros(B, np.int32)
@@ -238,20 +290,42 @@ class StreamService(SnapshotQueries):
         self.store.append(rows, new_phenx, new_date, n_new)
 
         # slab i-axis only needs the wave's own history extent, not the
-        # longest patient in the whole store
-        Ew = -(-int((n_old + n_new).max(initial=1)) // pm) * pm
+        # longest patient in the whole store; clamped to the plane width
+        # (itself geometric) so the slice below stays in bounds
+        Ew = min(_pow2_bucket(int((n_old + n_new).max(initial=1)), pm),
+                 self.store.max_events)
         mined = delta_lib.delta_mine(
             self.store.phenx[rows, :Ew], self.store.date[rows, :Ew],
             n_old, n_new, new_phenx, new_date, codec=self.codec,
             fuse_duration=self.fuse_duration, bucket_days=self.bucket_days,
             backend=self.backend, interpret=self.interpret)
         sketch_pending = self.sketch.update_begin(pids, mined.seq, mined.mask)
-        return PendingTick(B, pids, mined, sketch_pending, n_old, n_new, t0)
+        t_disp = time.perf_counter()
+        self.obs.tracer.finish(sp, patients=B, events=int(n_new.sum()))
+        # the device span stays open across the async gap; tick_finish
+        # closes it at completion-read, so overlapped shards' device
+        # spans visibly overlap in the exported trace
+        sp_dev = self.obs.tracer.begin("tick.device", cat="device",
+                                       track=self.track)
+        return PendingTick(B, pids, mined, sketch_pending, n_old, n_new, t0,
+                           t_disp, sp_dev)
 
     def tick_finish(self, pending: PendingTick) -> TickStats:
         """Collect a dispatched wave: materialize the mined slab, finish
         the sketch's host bookkeeping, append the corpus log, evict."""
         B, mined, pids = pending.B, pending.mined, pending.pids
+        # completion-read timing: block on the tick's *last* enqueued
+        # device computation (the sketch fold depends on the mined slab),
+        # so t_ready - t_disp times the dispatched chain itself, not the
+        # host-serial collect work that follows
+        novel = pending.sketch_pending.n_novel
+        if hasattr(novel, "block_until_ready"):
+            novel.block_until_ready()
+        t_ready = time.perf_counter()
+        if pending.span_device is not None:
+            self.obs.tracer.finish(pending.span_device)
+        sp = self.obs.tracer.begin("tick.collect", cat="host",
+                                   track=self.track)
         self.sketch.update_finish(pending.sketch_pending)
         m = np.asarray(mined.mask).reshape(B, -1)
         seq = np.asarray(mined.seq).reshape(B, -1)
@@ -261,12 +335,26 @@ class StreamService(SnapshotQueries):
         self._snap = None
 
         self.store.evict_over_budget()
+        t_end = time.perf_counter()
         st = TickStats(
             n_patients=B, n_events=int(pending.n_new.sum()),
             n_pairs=int(delta_lib.count_delta_pairs(pending.n_old,
                                                     pending.n_new)),
-            wall_s=time.perf_counter() - pending.t0)
+            wall_s=t_end - pending.t0,
+            dispatch_s=pending.t_disp - pending.t0,
+            collect_s=t_end - t_ready,
+            device_s=t_ready - pending.t_disp)
         self.stats.append(st)
+        self.obs.tracer.finish(sp, pairs=st.n_pairs)
+        self._m_ticks.inc()
+        self._m_events.inc(st.n_events)
+        self._m_pairs.inc(st.n_pairs)
+        self._m_dispatch.observe(st.dispatch_s)
+        self._m_collect.observe(st.collect_s)
+        self._m_device.observe(st.device_s)
+        self._m_queue.set(len(self.queue))
+        if self._retrace is not None:
+            self._m_retraces.inc(self._retrace.sample())
         return st
 
     def run(self) -> list[TickStats]:
@@ -275,6 +363,18 @@ class StreamService(SnapshotQueries):
         while self.queue:
             out.append(self.tick())
         return out
+
+    def sample_metrics(self) -> None:
+        """Set the snapshot-time gauges that are too costly per tick:
+        plane occupancy / byte gauges (host ints) and the sketch bucket
+        load factor (one device->host table copy).  Called by
+        ``MiningSession.metrics()`` and the launcher dumps, never from
+        the tick hot path."""
+        if not self.obs.enabled:
+            return
+        self.store.sample_metrics()
+        self.sketch.sample_metrics()
+        self._m_queue.set(len(self.queue))
 
     # --- migration handoff --------------------------------------------------
     def extract_patient(self, key) -> PatientState:

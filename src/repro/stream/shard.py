@@ -56,6 +56,7 @@ from collections import deque
 
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.core import chunking, sparsity
 from repro.data import pipeline
 from repro.distributed.sharding import merge_sharded_counts
@@ -150,6 +151,7 @@ class ShardedStreamService(SnapshotQueries):
                  mesh=None, rebalance_every: int | None = None,
                  imbalance_threshold: float = 1.5, min_gain: float = 0.05,
                  placement: str = "host", async_migration: bool | None = None,
+                 telemetry=None, busy_weighted_rebalance: bool = False,
                  **service_kwargs):
         if router is not None and router.n_shards != n_shards:
             raise ValueError(f"router covers {router.n_shards} shards, "
@@ -162,13 +164,25 @@ class ShardedStreamService(SnapshotQueries):
         self.rebalance_every = rebalance_every
         self.imbalance_threshold = imbalance_threshold
         self.min_gain = min_gain
+        self.busy_weighted_rebalance = busy_weighted_rebalance
         self.placement = placement
         self.async_migration = (placement == "devices"
                                 if async_migration is None else async_migration)
         self.devices = (shard_devices(n_shards, mesh)
                         if placement == "devices" else [None] * n_shards)
-        self.shards = [StreamService(device=d, **service_kwargs)
-                       for d in self.devices]
+        self.obs = telemetry if telemetry is not None else obs_lib.NOOP
+        # one retrace tracker for the whole sharded service: the jitted
+        # ingest functions (and their caches) are process-global, so
+        # per-shard trackers would each bill the same compilation
+        retrace = obs_lib.RetraceTracker() if self.obs.enabled else None
+        self.shards = [StreamService(device=d, telemetry=self.obs,
+                                     shard_tag=s, retrace_tracker=retrace,
+                                     **service_kwargs)
+                       for s, d in enumerate(self.devices)]
+        m = self.obs.metrics
+        self._m_migrations = m.counter("shard.migrations")
+        self._m_rebalances = m.counter("shard.rebalances")
+        self._m_pending = m.gauge("shard.pending_admits")
         self.codec = self.shards[0].codec
         self.fuse_duration = self.shards[0].fuse_duration
         self.n_buckets_log2 = self.shards[0].sketch.n_buckets_log2
@@ -180,6 +194,12 @@ class ShardedStreamService(SnapshotQueries):
         self._pending_keys: dict = {}       # key -> dst with state in flight
         self._tick_count = 0
         self._snap: Snapshot | None = None
+        # device-timed busy window for shard_load(): per-shard completion
+        # -timed seconds (TickStats.device_s) accumulated since the last
+        # shard_load() poll — maintained unconditionally (plain float
+        # adds), so the busy signal works with telemetry disabled
+        self._busy_acc = [0.0] * n_shards
+        self._busy_t0 = time.perf_counter()
 
     @property
     def n_shards(self) -> int:
@@ -209,6 +229,7 @@ class ShardedStreamService(SnapshotQueries):
         their mining instead of delaying it."""
         order = sorted(range(self.n_shards),
                        key=lambda s: bool(self._pending_admits[s]))
+        sp = self.obs.tracer.begin("sharded.tick", cat="host")
         if self.placement == "devices":
             begun = []
             for s in order:
@@ -217,8 +238,12 @@ class ShardedStreamService(SnapshotQueries):
                 if svc.queue:
                     p = svc.tick_begin()
                     if p is not None:
-                        begun.append((svc, p))
-            out = [svc.tick_finish(p) for svc, p in begun]
+                        begun.append((s, svc, p))
+            out = []
+            for s, svc, p in begun:
+                st = svc.tick_finish(p)
+                self._busy_acc[s] += st.device_s
+                out.append(st)
         else:
             out = []
             for s in order:
@@ -227,13 +252,16 @@ class ShardedStreamService(SnapshotQueries):
                 if svc.queue:
                     st = svc.tick()
                     if st is not None:
+                        self._busy_acc[s] += st.device_s
                         out.append(st)
+        self.obs.tracer.finish(sp, shards=len(out))
         if out:
             self._snap = None
             self._tick_count += 1
             if self.rebalance_every \
                     and self._tick_count % self.rebalance_every == 0:
-                self.rebalance()
+                self.rebalance(busy_weights=self.shard_load()
+                               if self.busy_weighted_rebalance else None)
         return out
 
     def run(self) -> list[TickStats]:
@@ -276,6 +304,9 @@ class ShardedStreamService(SnapshotQueries):
         if src == dst:
             return
         t0 = time.perf_counter()
+        sp = self.obs.tracer.begin("migrate", cat="migration",
+                                   track=f"shard{src}", key=repr(key),
+                                   src=src, dst=dst)
         src_svc, dst_svc = self.shards[src], self.shards[dst]
         queued = [d for d in src_svc.queue if d.key == key]
         if queued:
@@ -292,6 +323,8 @@ class ShardedStreamService(SnapshotQueries):
         self.router.assign(key, dst)
         self.migrations.append((key, src, dst))
         self.migration_wall_s += time.perf_counter() - t0
+        self.obs.tracer.finish(sp)
+        self._m_migrations.inc()
         self._snap = None
 
     def _flush_pending(self, shard: int | None = None) -> None:
@@ -306,12 +339,16 @@ class ShardedStreamService(SnapshotQueries):
             if not pending:
                 continue
             t0 = time.perf_counter()
+            sp = self.obs.tracer.begin("migration.admit", cat="migration",
+                                       track=f"shard{s}", n=len(pending))
             for state in pending:
                 self.shards[s].admit_patient(state)
                 del self._pending_keys[state.key]
             pending.clear()
             self.admit_wall_s += time.perf_counter() - t0
+            self.obs.tracer.finish(sp)
             self._snap = None
+        self._m_pending.set(sum(len(p) for p in self._pending_admits))
 
     def _patient_costs(self, svc: StreamService) -> dict:
         """Per-patient mining cost on one shard: n^2 * BYTES_PER_PAIR over
@@ -330,9 +367,26 @@ class ShardedStreamService(SnapshotQueries):
         return [sum(self._patient_costs(svc).values())
                 for svc in self.shards]
 
+    def shard_load(self) -> list[float]:
+        """Device-timed busy fraction per shard over the window since the
+        last poll (completion-read seconds / window elapsed, clamped to
+        [0, 1]).  Unlike :meth:`shard_loads` this measures *observed* device
+        occupancy, not the static pair-cost model: a shard whose device is
+        slower, contended, or serving a pathological history mix reads hot
+        even when its resident bytes look balanced.  The window resets on
+        every call, so callers poll it like a rate counter; with nothing
+        ticked since the last poll all fractions are 0."""
+        now = time.perf_counter()
+        window = max(now - self._busy_t0, 1e-9)
+        fracs = [min(b / window, 1.0) for b in self._busy_acc]
+        self._busy_acc = [0.0] * self.n_shards
+        self._busy_t0 = now
+        return fracs
+
     def rebalance(self, imbalance_threshold: float | None = None,
                   max_moves: int | None = None,
-                  min_gain: float | None = None) -> list[tuple]:
+                  min_gain: float | None = None,
+                  busy_weights: list[float] | None = None) -> list[tuple]:
         """Greedy LPT rebalancing: while the hottest shard's load exceeds
         ``imbalance_threshold`` x the mean, migrate its costliest patient
         that still lowers the maximum to the coldest shard.  Every move
@@ -344,33 +398,68 @@ class ShardedStreamService(SnapshotQueries):
         only worth it when it lowers ``max(hot, cold)`` by more than
         ``min_gain`` x the mean load.  A borderline patient whose move
         would barely dent the imbalance stays put instead of ping-ponging
-        between two near-equal shards on alternating rebalance passes."""
+        between two near-equal shards on alternating rebalance passes.
+
+        ``busy_weights`` (typically :meth:`shard_load` fractions) scales
+        each shard's cost model by its observed device occupancy: weights
+        are normalized to mean 1 and a patient's effective cost on shard
+        ``s`` is ``bytes * w[s]`` — the same bytes cost more on a busy
+        device, so patients drain toward shards that are measurably idle,
+        not just byte-light.  All-zero weights (nothing ticked since the
+        last poll) fall back to the unweighted model.  Weighted moves no
+        longer strictly shrink the sum of squares (a patient's cost changes
+        as it moves), so the loop carries an iteration safety cap."""
         thr = (self.imbalance_threshold if imbalance_threshold is None
                else imbalance_threshold)
         gain_floor = self.min_gain if min_gain is None else min_gain
         self._flush_pending()   # cost accounting needs every patient homed
         costs = [self._patient_costs(svc) for svc in self.shards]
-        loads = [sum(c.values()) for c in costs]
+        w = [1.0] * self.n_shards
+        if busy_weights is not None:
+            if len(busy_weights) != self.n_shards:
+                raise ValueError(
+                    f"busy_weights covers {len(busy_weights)} shards, "
+                    f"service has {self.n_shards}")
+            wmean = sum(busy_weights) / len(busy_weights)
+            if wmean > 0:
+                w = [bw / wmean for bw in busy_weights]
+        loads = [sum(c.values()) * w[s] for s, c in enumerate(costs)]
         mean = sum(loads) / len(loads)
         moves: list[tuple] = []
-        while max_moves is None or len(moves) < max_moves:
+        cap = 4 * sum(len(c) for c in costs) + 4  # weighted-cost safety cap
+        while (max_moves is None or len(moves) < max_moves) \
+                and len(moves) < cap:
             hot = max(range(len(loads)), key=loads.__getitem__)
             cold = min(range(len(loads)), key=loads.__getitem__)
             if loads[hot] <= thr * mean or loads[hot] == 0:
                 break
             cands = [(c, k) for k, c in costs[hot].items()
-                     if loads[cold] + c < loads[hot]
-                     and loads[hot] - max(loads[hot] - c, loads[cold] + c)
+                     if loads[cold] + c * w[cold] < loads[hot]
+                     and loads[hot] - max(loads[hot] - c * w[hot],
+                                          loads[cold] + c * w[cold])
                      > gain_floor * mean]
             if not cands:
                 break
             c, key = max(cands, key=lambda t: t[0])
             self.migrate(key, cold)
             costs[cold][key] = costs[hot].pop(key)
-            loads[hot] -= c
-            loads[cold] += c
+            loads[hot] -= c * w[hot]
+            loads[cold] += c * w[cold]
             moves.append((key, hot, cold))
+        if moves:
+            self._m_rebalances.inc()
         return moves
+
+    def sample_metrics(self) -> None:
+        """Refresh snapshot-time gauges on every shard (store plane bytes /
+        occupancy, sketch load factor) plus the sharded-level pending-admit
+        queue depth.  Called by ``Telemetry``-aware snapshot paths, never
+        per tick."""
+        if not self.obs.enabled:
+            return
+        for svc in self.shards:
+            svc.sample_metrics()
+        self._m_pending.set(sum(len(p) for p in self._pending_admits))
 
     # --- snapshot / queries -------------------------------------------------
     def _global_pids(self, svc: StreamService, local_pat: np.ndarray):

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.core import chunking
 
 
@@ -72,10 +73,25 @@ class PatientStore:
     """
 
     def __init__(self, pad_multiple: int = 8, budget_bytes: int | None = None,
-                 init_patients: int = 8, init_events: int = 8, device=None):
+                 init_patients: int = 8, init_events: int = 8, device=None,
+                 telemetry=None, labels: dict | None = None):
         self.pad_multiple = pad_multiple
         self.budget_bytes = budget_bytes
         self.device = device
+        self.obs = telemetry if telemetry is not None else obs_lib.NOOP
+        lbl = labels or {}
+        m = self.obs.metrics
+        self._m_admits = m.counter("store.admits", **lbl)
+        self._m_restores = m.counter("store.restores", **lbl)
+        self._m_evictions = m.counter("store.evictions", **lbl)
+        self._m_growths = m.counter("store.plane_growths", **lbl)
+        self._m_shrinks = m.counter("store.plane_shrinks", **lbl)
+        self._m_resident = m.gauge("store.resident_rows", **lbl)
+        self._m_spilled = m.gauge("store.spilled_patients", **lbl)
+        self._m_plane_bytes = m.gauge("store.plane_bytes", **lbl)
+        self._m_occupancy = m.gauge("store.plane_occupancy", **lbl)
+        self._m_resident_cost = m.gauge("store.resident_pair_bytes", **lbl)
+        self._m_budget = m.gauge("store.budget_bytes", **lbl)
         self.phenx = jnp.zeros((init_patients, init_events), jnp.int32)
         self.date = jnp.zeros((init_patients, init_events), jnp.int32)
         self.nevents = jnp.zeros(init_patients, jnp.int32)
@@ -123,6 +139,7 @@ class PatientStore:
         grow = need - self.max_events
         self.phenx = jnp.pad(self.phenx, ((0, 0), (0, grow)))
         self.date = jnp.pad(self.date, ((0, 0), (0, grow)))
+        self._m_growths.inc()
 
     def _ensure_rows(self, n_more: int) -> None:
         if len(self._free) >= n_more:
@@ -134,6 +151,7 @@ class PatientStore:
         self.nevents = jnp.pad(self.nevents, (0, new_rows))
         self._touch = np.pad(self._touch, (0, new_rows))
         self._free.extend(range(old + new_rows - 1, old - 1, -1))
+        self._m_growths.inc()
 
     # --- admission ----------------------------------------------------------
     def admit(self, keys) -> tuple[np.ndarray, np.ndarray]:
@@ -174,6 +192,9 @@ class PatientStore:
         self._clock += 1
         out_rows = np.asarray([self.rows[k] for k in keys], np.int32)
         self._touch[out_rows] = self._clock
+        self._m_admits.inc(len(missing))
+        self._m_restores.inc(len(restored))
+        self._m_resident.set(len(self.rows))
         return out_rows, np.asarray([self.pids[k] for k in keys], np.int32)
 
     def append(self, rows, new_phenx, new_date, n_new) -> None:
@@ -222,6 +243,9 @@ class PatientStore:
             self._free.append(int(row))
             evicted.append(key)
         self.nevents = self.nevents.at[jnp.asarray(victims)].set(0)
+        self._m_evictions.inc(len(evicted))
+        self._m_resident.set(len(self.rows))
+        self._m_spilled.set(len(self._spilled))
         return evicted
 
     # --- migration handoff --------------------------------------------------
@@ -277,6 +301,7 @@ class PatientStore:
             need_e = max(hwm_e, self._round(self.max_events // 2))
             self.phenx = self.phenx[:, :need_e]
             self.date = self.date[:, :need_e]
+            self._m_shrinks.inc()
         top = max(self.rows.values(), default=-1)
         hwm_r = self._round(top + 1)
         if 2 * hwm_r <= self.n_rows:
@@ -286,6 +311,24 @@ class PatientStore:
             self.nevents = self.nevents[:need_r]
             self._touch = self._touch[:need_r]
             self._free = [r for r in self._free if r < need_r]
+            self._m_shrinks.inc()
+
+    def sample_metrics(self) -> None:
+        """Snapshot-time gauges: plane bytes/occupancy and the resident
+        mining working set vs budget (the eviction signal), priced with
+        the same BYTES_PER_PAIR model the planner and evictor use."""
+        if not self.obs.enabled:
+            return
+        nev = np.asarray(self.nevents)
+        self._m_plane_bytes.set(
+            int(self.phenx.size + self.date.size + self.nevents.size) * 4)
+        self._m_occupancy.set(
+            float(nev.sum()) / max(self.n_rows * self.max_events, 1))
+        self._m_resident_cost.set(
+            int((nev.astype(np.int64) ** 2).sum()) * chunking.BYTES_PER_PAIR)
+        self._m_budget.set(self.budget_bytes or 0)
+        self._m_resident.set(len(self.rows))
+        self._m_spilled.set(len(self._spilled))
 
     # --- introspection ------------------------------------------------------
     def history(self, key) -> tuple[np.ndarray, np.ndarray]:

@@ -124,3 +124,35 @@ def test_overhead_regression_gate_present(workflow):
     assert "BENCH_api_overhead.json" in runs
     assert "2 * stored" in runs
     assert "0.05" in runs
+
+
+def test_observability_gate_present(workflow, suites):
+    """Telemetry must stay < 3% on the ingest hot path: tier-1 carries a
+    gate running the observability suite against the checked-in
+    BENCH_observability_overhead.json, and the suite is registered (so
+    bench-smoke regenerates the artifact on every PR)."""
+    assert "observability_overhead" in suites
+    runs = " ".join(s.get("run", "")
+                    for s in workflow["jobs"]["tier1"]["steps"])
+    assert "BENCH_observability_overhead.json" in runs
+    assert "observability_overhead" in runs
+    assert "0.03" in runs
+
+
+def test_nightly_uploads_trace_artifact(workflow):
+    """The nightly chaos leg must produce an inspectable Chrome trace: a
+    sharded telemetry-on replay with --trace-out on forced host devices,
+    uploaded with if-no-files-found: error so a silently-empty trace
+    fails the job."""
+    slow = workflow["jobs"]["slow-nightly"]
+    runs = " ".join(s.get("run", "") for s in slow["steps"])
+    assert "--trace-out" in runs and "--metrics-json" in runs
+    assert "--shards" in runs and "repro.launch.stream" in runs
+    envs = [s.get("env", {}) for s in slow["steps"] if s.get("run")]
+    assert any("xla_force_host_platform_device_count"
+               in str(e.get("XLA_FLAGS", "")) for e in envs)
+    upload = [s for s in slow["steps"]
+              if "upload-artifact" in s.get("uses", "")]
+    assert upload, "slow-nightly has no artifact upload step"
+    assert upload[0]["with"]["if-no-files-found"] == "error"
+    assert "chaos_trace.json" in upload[0]["with"]["path"]
