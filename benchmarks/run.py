@@ -31,6 +31,13 @@
                      must cost < 3% and change zero mined bytes
                      (``--suite observability_overhead`` writes
                      BENCH_observability_overhead.json)
+  storage_tiering -> compressed disk tier: codec compression ratio
+                     (asserted >= 3x on the synthea shape), tiered
+                     ingest with disk demotion on the eviction path,
+                     and checkpoint save/restore timing with the
+                     restored bytes asserted identical
+                     (``--suite storage_tiering`` writes
+                     BENCH_storage_tiering.json)
 
 An unknown ``--suite`` prints the available suites instead of failing
 opaquely.  Prints ``name,us_per_call,derived`` CSV rows.
@@ -163,6 +170,13 @@ def observability_overhead_bench(small=True, out_path=None):
     observability.main(small=small, json_path=out_path, backend="jnp")
 
 
+def storage_tiering_bench(small=True, out_path=None):
+    from benchmarks import storage_tiering
+
+    out_path = out_path or "BENCH_storage_tiering.json"
+    storage_tiering.main(small=small, json_path=out_path, backend="jnp")
+
+
 SUITES = {
     "streaming": ("streaming ingest (delta vs re-mine)", streaming_bench),
     "streaming_sharded": ("mesh-sharded streaming (shards vs single)",
@@ -175,6 +189,8 @@ SUITES = {
                      api_overhead_bench),
     "observability_overhead": ("telemetry on/off ingest (< 3% ceiling)",
                                observability_overhead_bench),
+    "storage_tiering": ("compressed disk tier + checkpoint/resume "
+                        "(>= 3x ratio asserted)", storage_tiering_bench),
 }
 
 

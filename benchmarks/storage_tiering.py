@@ -1,0 +1,187 @@
+"""Tiered storage benchmark — codec compression, disk-tier ingest, resume.
+
+Three sections, every one with its exactness check inline (a benchmark
+that silently mines different bytes is worse than no benchmark):
+
+  * **codec**: every synthea patient history encoded into a
+    CompressedBlockStore with a cohort dictionary — compression ratio
+    (asserted >= 3x on this clinical shape: monotone dates, small code
+    vocabulary), encode and decode throughput, exact roundtrip on every
+    block;
+  * **tiered ingest**: the same cohort replayed through a MiningSession
+    with a device budget tight enough to spill and a disk budget tight
+    enough to demote — ingest throughput with the disk tier on the
+    eviction path, demotion/restore counts from the ``storage.*``
+    metrics, corpus asserted equal to the batch mine;
+  * **checkpoint/resume**: the live session checkpointed and restored —
+    save/restore wall clock, checkpoint size on disk, and the restored
+    snapshot asserted byte-identical (seq/dur/patient/counts) before the
+    replay continues.
+
+Prints ``name,us_per_call,derived`` CSV rows; ``main(json_path=...)``
+writes the numbers for the CI smoke artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.api import MiningConfig, MiningSession
+from repro.core import mining
+from repro.data import dbmart, synthea
+from repro.launch.stream import replay_waves
+from repro.storage.blockstore import CompressedBlockStore
+from repro.storage.codec import CodeDictionary
+
+
+def _cohort(n_patients, avg_events, seed=11):
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=n_patients, avg_events=avg_events, seed=seed)
+    return dbmart.from_rows(pats, dates, phx)
+
+
+def codec_bench(db, root: str) -> dict:
+    """Blockstore over the whole cohort: ratio + encode/decode rates."""
+    histories = [(p, db.phenx[p, : int(db.nevents[p])],
+                  db.date[p, : int(db.nevents[p])])
+                 for p in range(db.n_patients) if int(db.nevents[p])]
+    dictionary = CodeDictionary.from_histories([h[1] for h in histories])
+    bs = CompressedBlockStore(root, dictionary=dictionary, auto_flush=False)
+    n_events = sum(len(h[1]) for h in histories)
+
+    t0 = time.perf_counter()
+    for p, ph, dt in histories:
+        bs.put(p, ph, dt)
+    bs.flush()
+    encode_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for p, ph, dt in histories:
+        got_ph, got_dt = bs.get(p)
+        assert (got_ph == ph).all() and (got_dt == dt).all(), \
+            f"codec roundtrip mismatch for patient {p}"
+    decode_s = time.perf_counter() - t0
+
+    ratio = bs.compression_ratio()
+    assert ratio >= 3.0, (
+        f"compression ratio {ratio:.2f}x < 3x on a synthea-shaped cohort — "
+        "the delta/varint/dictionary codec regressed")
+    out = {
+        "patients": len(histories), "events": n_events,
+        "raw_bytes": bs.raw_bytes_held, "encoded_bytes": bs.bytes_held,
+        "compression_ratio": ratio,
+        "encode_s": encode_s, "decode_s": decode_s,
+        "encode_events_per_s": n_events / max(encode_s, 1e-9),
+        "decode_events_per_s": n_events / max(decode_s, 1e-9),
+    }
+    bs.close()
+    return out
+
+
+def tiered_ingest_bench(db, n_waves, tick_patients, backend, seed):
+    """Replay with the disk tier on the eviction path; batch-exact."""
+    session = MiningSession(MiningConfig(
+        tick_patients=tick_patients, backend=backend, n_buckets_log2=18,
+        screen="hash", budget_bytes=60_000, disk_bytes=20_000,
+        telemetry=True))
+    t0 = time.perf_counter()
+    for _ in replay_waves(db, session, n_waves, seed):
+        session.service.run()
+    ingest_s = time.perf_counter() - t0
+
+    svc = session.service
+    mined = mining.mine(db.phenx, db.date, db.nevents, backend=backend)
+    assert len(svc.snapshot().seq) == int(np.asarray(mined.mask).sum()), \
+        "tiered streamed corpus size != batch mine"
+
+    m = session.metrics()
+    tiers = {k: v for k, v in m.items() if k.startswith("storage.")}
+    demotions = sum(v for k, v in m.items()
+                    if k.startswith("storage.demotions"))
+    assert demotions > 0, (
+        "disk budget never demoted anyone — the benchmark is not "
+        "exercising the disk tier; tighten budget_bytes/disk_bytes")
+    events = int(sum(s.n_events for s in svc.stats))
+    return {
+        "events": events, "ingest_s": ingest_s,
+        "events_per_s": events / max(ingest_s, 1e-9),
+        "demotions": int(demotions),
+        "disk_restores": sum(
+            v for k, v in m.items()
+            if k.startswith("storage.restores") and "disk" in k),
+        "storage_metrics": tiers,
+    }, session
+
+
+def checkpoint_bench(session, ckpt_dir: str) -> dict:
+    """Save + restore the live session; restored bytes must be identical."""
+    before = session.service.snapshot()
+
+    t0 = time.perf_counter()
+    path = session.checkpoint(ckpt_dir)
+    save_s = time.perf_counter() - t0
+    ckpt_bytes = sum(os.path.getsize(os.path.join(path, f))
+                     for f in os.listdir(path))
+
+    t0 = time.perf_counter()
+    restored = MiningSession.restore(path)
+    after = restored.service.snapshot()
+    restore_s = time.perf_counter() - t0
+
+    assert (before.seq == after.seq).all() \
+        and (before.dur == after.dur).all() \
+        and (before.patient == after.patient).all() \
+        and (before.counts == after.counts).all(), \
+        "restored snapshot is not byte-identical to the checkpointed one"
+    return {
+        "save_s": save_s, "restore_s": restore_s,
+        "checkpoint_bytes": ckpt_bytes,
+        "corpus_rows": int(len(before.seq)),
+        "restore_rows_per_s": len(before.seq) / max(restore_s, 1e-9),
+        "restore_bytes_per_s": ckpt_bytes / max(restore_s, 1e-9),
+    }
+
+
+def main(small=True, json_path=None, backend="jnp", seed=11):
+    n_patients = 80 if small else 400
+    avg_events = 24 if small else 40
+    db = _cohort(n_patients, avg_events, seed)
+
+    with tempfile.TemporaryDirectory(prefix="tspm_bench_") as tmp:
+        codec = codec_bench(db, os.path.join(tmp, "blocks"))
+        ingest, session = tiered_ingest_bench(
+            db, n_waves=6 if small else 10,
+            tick_patients=8 if small else 16, backend=backend, seed=seed)
+        ckpt = checkpoint_bench(session, os.path.join(tmp, "ckpt"))
+
+    print("name,us_per_call,derived")
+    print(f"storage/codec_encode,{codec['encode_s']*1e6:.0f},"
+          f"ratio={codec['compression_ratio']:.2f}x;"
+          f"events_per_s={codec['encode_events_per_s']:.0f}")
+    print(f"storage/codec_decode,{codec['decode_s']*1e6:.0f},"
+          f"events_per_s={codec['decode_events_per_s']:.0f}")
+    print(f"storage/tiered_ingest,{ingest['ingest_s']*1e6:.0f},"
+          f"events_per_s={ingest['events_per_s']:.0f};"
+          f"demotions={ingest['demotions']};"
+          f"disk_restores={ingest['disk_restores']}")
+    print(f"storage/checkpoint_save,{ckpt['save_s']*1e6:.0f},"
+          f"bytes={ckpt['checkpoint_bytes']}")
+    print(f"storage/checkpoint_restore,{ckpt['restore_s']*1e6:.0f},"
+          f"rows_per_s={ckpt['restore_rows_per_s']:.0f}")
+
+    record = {"patients": n_patients, "avg_events": avg_events,
+              "backend": backend, "codec": codec, "tiered_ingest": ingest,
+              "checkpoint": ckpt}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -52,8 +52,9 @@ def one_cohort(n_patients=300, avg_events=32, n_waves=8, tick_patients=16,
         nev = np.asarray(svc.store.nevents)
         resident = np.asarray(sorted(svc.store.rows.values()), np.int64)
         full = int(mining.count_sequences(nev[resident])) + int(sum(
-            len(p) * (len(p) - 1) // 2
-            for p, _ in map(svc.store.history, svc.store._spilled)))
+            n * (n - 1) // 2
+            for k, n in svc.store.event_counts().items()
+            if k not in svc.store.rows))
         delta_pairs = int(sum(t.n_pairs for t in ticks))
         waves.append({
             "wave": w, "wall_s": dt,

@@ -30,6 +30,27 @@ def main():
     for d in frame.top_k(8).decode():
         print(f"  {d.text:55s} support={d.support}")
 
+    # --- streaming with checkpoint / resume --------------------------------
+    # The same cohort arriving incrementally, with a byte budget tight
+    # enough to spill and a disk budget demoting cold histories into the
+    # compressed block tier; the session checkpoints mid-stream and a
+    # fresh session restores it, continuing byte-identically.
+    import tempfile
+
+    stream = MiningSession(MiningConfig(
+        threshold=5, screen="hash", tick_patients=16,
+        budget_bytes=1 << 20, disk_bytes=1 << 18), vocab=db.vocab)
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        stream.submit(p, db.date[p, :n], db.phenx[p, :n])
+    stream.tick()                              # ingest one wave...
+    with tempfile.TemporaryDirectory() as ckpt:
+        stream.checkpoint(ckpt)                # ...snapshot it atomically
+        resumed = MiningSession.restore(ckpt, vocab=db.vocab)
+    resumed.run()                              # drain the rest after "restart"
+    print(f"\nresumed stream: kept {resumed.frame().screen().n_kept:,} "
+          f"at support>=5 (continuation is byte-identical)")
+
 
 if __name__ == "__main__":
     main()

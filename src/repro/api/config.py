@@ -52,6 +52,14 @@ class MiningConfig:
     budget_bytes: int | None = None  # mining working-set byte budget
     spill_bytes: int | None = None  # host corpus size that triggers file spill
     spill_dir: str | None = None    # where the file engine spills (tmp if None)
+    disk_bytes: int | None = None   # host-spill budget: streaming evictions
+    #                                 beyond it demote (oldest first) into the
+    #                                 compressed disk tier, same pair-cost
+    #                                 model as budget_bytes one boundary down
+    #                                 (None = host tier unbounded, no disk)
+    disk_dir: str | None = None     # disk-tier blockstore location (tmp if
+    #                                 None; sharded engines use per-shard
+    #                                 subdirectories)
     engine: str | None = None       # force one of ENGINES (None = planner)
 
     # --- streaming / sharding ---------------------------------------------
@@ -109,6 +117,7 @@ class Plan:
     reason: str
     working_set_bytes: int = 0
     budget_bytes: int | None = None
+    disk_bytes: int | None = None
     corpus_bytes: int = 0
     n_chunks: int = 1
     n_shards: int = 1
@@ -123,6 +132,10 @@ class Plan:
             f" (budget {_fmt_bytes(self.budget_bytes)})",
             f"  flat corpus : {_fmt_bytes(self.corpus_bytes)}",
         ]
+        if self.disk_bytes is not None:
+            lines.append(f"  disk tier   : host spill over "
+                         f"{_fmt_bytes(self.disk_bytes)} demotes to "
+                         "compressed blocks")
         if self.n_chunks > 1:
             lines.append(f"  chunks      : {self.n_chunks}")
         if self.n_shards > 1:

@@ -76,6 +76,7 @@ def make_plan(config: MiningConfig, nevents=None,
                 if budget is not None and len(nevents) else 1)
     placement = resolve_placement(config)
     common = dict(working_set_bytes=ws, budget_bytes=budget,
+                  disk_bytes=config.disk_bytes,
                   corpus_bytes=corpus, n_chunks=n_chunks,
                   n_shards=config.n_shards, placement=placement,
                   incremental=incremental)

@@ -20,6 +20,8 @@ same cohort (tests/test_api.py) — the engine is purely a resource choice.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
 import shutil
 import tempfile
 
@@ -32,8 +34,10 @@ from repro.api.frame import SequenceFrame
 from repro.core import chunking, mining, sparsity
 from repro.core.encoding import Vocab
 from repro.data.dbmart import DBMart
+from repro.storage.state import pack_tree, unpack_tree
 from repro.stream.service import StreamService
 from repro.stream.shard import ShardedStreamService, ShardRouter
+from repro.training import checkpoint as ckpt_lib
 
 
 class MiningSession:
@@ -59,6 +63,8 @@ class MiningSession:
         self.service: StreamService | ShardedStreamService | None = None
         self.last_plan: Plan | None = None
         self.last_frame: SequenceFrame | None = None
+        self.restore_extra: dict = {}   # user extras from the checkpoint
+        #                                 this session was restored from
 
     # --- planning -----------------------------------------------------------
     def plan(self, db: DBMart | None = None) -> Plan:
@@ -205,7 +211,8 @@ class MiningSession:
         kw = dict(tick_patients=c.tick_patients, codec=c.codec,
                   backend=c.backend, n_buckets_log2=c.n_buckets_log2,
                   budget_bytes=c.budget_bytes, fuse_duration=c.fuse_duration,
-                  bucket_days=c.bucket_days, max_slot_events=c.max_slot_events)
+                  bucket_days=c.bucket_days, max_slot_events=c.max_slot_events,
+                  disk_bytes=c.disk_bytes, disk_dir=c.disk_dir)
         tel = self.telemetry if self.telemetry.enabled else None
         if not sharded:
             return StreamService(telemetry=tel, **kw)
@@ -216,6 +223,71 @@ class MiningSession:
             min_gain=c.min_gain,
             busy_weighted_rebalance=c.busy_weighted_rebalance,
             placement=planner.resolve_placement(c), telemetry=tel, **kw)
+
+    # --- checkpoint / resume ------------------------------------------------
+    def checkpoint(self, ckpt_dir: str, step: int | None = None,
+                   extra: dict | None = None) -> str:
+        """Atomically capture the live streaming session to ``ckpt_dir``.
+
+        Everything that makes continuation byte-identical goes in: store
+        planes and residency tiers, sketch tables, queued deltas, the
+        mined corpus, router pins, in-flight migration payloads, and tick
+        counters — via the training checkpoint layout (``arrays.npz`` +
+        ``manifest.json`` in a tmp dir, atomically renamed), so a crash
+        mid-save never corrupts the previous checkpoint.  ``step``
+        defaults to the service's tick count; ``extra`` is a JSON-able
+        user dict surfaced as ``restore_extra`` after :meth:`restore`.
+        Returns the checkpoint path."""
+        if self.service is None:
+            raise RuntimeError("nothing to checkpoint: only live streaming "
+                               "sessions persist; submit()/tick() first "
+                               "(batch fit results are already a frame)")
+        with self.telemetry.tracer.span("checkpoint.save", cat="host"):
+            sharded = isinstance(self.service, ShardedStreamService)
+            state = self.service.state_dict()
+            if step is None:
+                step = int(state["tick_count"] if sharded
+                           else state["n_ticks"])
+            tree = {"format": "tspm-session-v1",
+                    "engine": "sharded" if sharded else "stream",
+                    "config": dataclasses.asdict(self.config),
+                    "state": state}
+            json_tree, arrays = pack_tree(tree)
+            return ckpt_lib.save(ckpt_dir, step, arrays,
+                                 extra={"session": json_tree,
+                                        "user": extra or {}})
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, *, mesh=None,
+                vocab: Vocab | None = None) -> "MiningSession":
+        """Rebuild a streaming session from a :meth:`checkpoint` directory
+        (or one specific ``step_*`` path inside it) and continue exactly
+        where it left off — the restarted service's corpus, sketch, and
+        router state are byte-identical to the uninterrupted run's.
+        Runtime resources (``mesh``, ``vocab``) are re-supplied by the
+        caller, like the constructor."""
+        path = ckpt_dir
+        if not os.path.exists(os.path.join(path, "manifest.json")):
+            found = ckpt_lib.latest(ckpt_dir)
+            if found is None:
+                raise FileNotFoundError(
+                    f"no checkpoint under {ckpt_dir!r}")
+            path = found
+        leaves, manifest = ckpt_lib.load(path)
+        tree = unpack_tree(manifest["extra"]["session"], leaves)
+        if tree.get("format") != "tspm-session-v1":
+            raise ValueError(f"{path!r} is not a session checkpoint "
+                             f"(format {tree.get('format')!r})")
+        config = MiningConfig(**tree["config"])
+        session = cls(config, mesh=mesh, vocab=vocab)
+        with session.telemetry.tracer.span("checkpoint.restore", cat="host"):
+            sharded = tree["engine"] == "sharded"
+            svc = session._make_service(sharded=sharded)
+            svc.load_state_dict(tree["state"])
+            session.service = svc
+            session.last_plan = planner.make_plan(config, incremental=True)
+        session.restore_extra = manifest["extra"].get("user", {})
+        return session
 
     # --- observability ------------------------------------------------------
     def metrics(self) -> dict:

@@ -19,10 +19,13 @@ from repro.data import dbmart, synthea
 from repro.stream.shard import ShardedStreamService, ShardRouter
 
 
-def replay_waves(db, svc, n_waves: int, seed: int = 0):
+def replay_waves(db, svc, n_waves: int, seed: int = 0, start_wave: int = 0):
     """Split each patient's history into ~n_waves chronological deltas and
     interleave them (wave-major), mimicking encounter-by-encounter arrival.
-    ``svc`` is anything with ``submit`` (a service or a MiningSession)."""
+    ``svc`` is anything with ``submit`` (a service or a MiningSession).
+    ``start_wave`` skips earlier waves without submitting them (the wave
+    cuts are seed-deterministic, so a resumed replay continues the exact
+    delta schedule a checkpointed run left off at)."""
     rng = np.random.default_rng(seed)
     cuts = []
     for p in range(db.n_patients):
@@ -32,6 +35,8 @@ def replay_waves(db, svc, n_waves: int, seed: int = 0):
             if n > 1 and k > 1 else np.zeros(0, np.int64)
         cuts.append(np.concatenate([[0], edges, [n]]).astype(np.int64))
     for w in range(n_waves):
+        if w < start_wave:
+            continue
         for p in range(db.n_patients):
             c = cuts[p]
             if w + 1 < len(c) and c[w] < c[w + 1]:
@@ -51,6 +56,22 @@ def main(argv=None):
     ap.add_argument("--backend", default="jnp", choices=["jnp", "kernel", "auto"])
     ap.add_argument("--budget-mb", type=int, default=0,
                     help="store byte budget in MiB (0 = unbounded)")
+    ap.add_argument("--disk-bytes", type=int, default=0,
+                    help="host-spill byte budget: evicted histories past "
+                         "it demote into the compressed disk tier "
+                         "(0 = host tier unbounded, no disk tier)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="checkpoint the session here after every wave "
+                         "(atomic step_<wave> dirs; see --resume)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest checkpoint in "
+                         "--checkpoint-dir and continue the replay from "
+                         "the next wave (config comes from the "
+                         "checkpoint; continuation is byte-identical to "
+                         "an uninterrupted run)")
+    ap.add_argument("--stop-after-wave", type=int, default=None,
+                    metavar="W", help="exit after checkpointing wave W "
+                    "(simulates a killed service; pair with --resume)")
     ap.add_argument("--shards", type=int, default=1,
                     help="patient shards over the ('data',) mesh")
     ap.add_argument("--placement", default="auto",
@@ -90,6 +111,8 @@ def main(argv=None):
                  "(rebalancing migrates patients between shards)")
     if args.busy_weighted_rebalance and not args.rebalance_every:
         ap.error("--busy-weighted-rebalance requires --rebalance-every")
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
     telemetry = bool(args.metrics_json or args.trace_out)
 
     pats, dates, phx, _ = synthea.generate_cohort(
@@ -100,6 +123,7 @@ def main(argv=None):
         threshold=args.threshold, screen="hash", backend=args.backend,
         n_buckets_log2=args.buckets_log2, tick_patients=args.tick_patients,
         budget_bytes=(args.budget_mb << 20) or None,
+        disk_bytes=args.disk_bytes or None,
         n_shards=args.shards, router=args.router,
         placement=args.placement,
         rebalance_every=args.rebalance_every or None,
@@ -115,8 +139,15 @@ def main(argv=None):
         if args.router == "balance":
             router = ShardRouter.balanced(list(range(db.n_patients)),
                                           db.nevents, args.shards)
-    session = MiningSession(config, mesh=mesh, router=router,
-                            vocab=db.vocab)
+    start_wave = 0
+    if args.resume:
+        session = MiningSession.restore(args.checkpoint_dir, mesh=mesh,
+                                        vocab=db.vocab)
+        start_wave = int(session.restore_extra.get("next_wave", 0))
+        print(f"resumed from {args.checkpoint_dir} at wave {start_wave}")
+    else:
+        session = MiningSession(config, mesh=mesh, router=router,
+                                vocab=db.vocab)
     print(session.plan())
 
     def _status():
@@ -131,9 +162,17 @@ def main(argv=None):
                 f"resident={len(svc.store.rows)}")
 
     t0 = time.perf_counter()
-    for w in replay_waves(db, session, args.waves, args.seed):
+    for w in replay_waves(db, session, args.waves, args.seed,
+                          start_wave=start_wave):
         session.service.run()
         print(f"wave {w}: {_status()}")
+        if args.checkpoint_dir:
+            path = session.checkpoint(args.checkpoint_dir, step=w,
+                                      extra={"next_wave": w + 1})
+            print(f"checkpoint -> {path}")
+        if args.stop_after_wave is not None and w >= args.stop_after_wave:
+            print(f"stopping after wave {w} (resume with --resume)")
+            break
     dt = time.perf_counter() - t0
     svc = session.service
     ev = sum(s.n_events for s in svc.stats)

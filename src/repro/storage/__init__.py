@@ -1,0 +1,16 @@
+"""Tiered compressed storage for patient histories + checkpoint plumbing.
+
+The residency story below device RAM: :mod:`~repro.storage.codec`
+(delta-of-timestamp + varint block codec, exact roundtrip for any int32
+history), :mod:`~repro.storage.blockstore` (disk block files + JSON
+index, crc-verified, atomically flushed), :mod:`~repro.storage.tiers`
+(the ``ResidencyTier`` protocol with host and disk implementations the
+:class:`~repro.stream.store.PatientStore` walks), and
+:mod:`~repro.storage.state` (checkpoint state trees for
+``MiningSession.checkpoint`` / ``restore``).
+"""
+from repro.storage.blockstore import CompressedBlockStore  # noqa: F401
+from repro.storage.codec import (CodeDictionary, decode_block,  # noqa: F401
+                                 decode_key, encode_block, encode_key)
+from repro.storage.state import pack_tree, unpack_tree  # noqa: F401
+from repro.storage.tiers import DiskTier, HostTier, ResidencyTier  # noqa: F401

@@ -214,6 +214,23 @@ class OnlineSupportSketch:
         if len(ids):
             self._bucket_transfer(ids, 1)
 
+    # --- checkpoint ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Bucket table + per-patient set planes (shapes included: the
+        restored planes keep their exact width, so the first post-restore
+        tick retraces nothing the uninterrupted run wouldn't)."""
+        return {"counts": np.asarray(self.counts),
+                "seqset": np.asarray(self.seqset),
+                "n_distinct": self.n_distinct.copy()}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.counts = jnp.asarray(np.asarray(state["counts"], np.int32))
+        self.seqset = jnp.asarray(np.asarray(state["seqset"], np.int64))
+        if self.device is not None:
+            self.counts = jax.device_put(self.counts, self.device)
+            self.seqset = jax.device_put(self.seqset, self.device)
+        self.n_distinct = np.asarray(state["n_distinct"], np.int32).copy()
+
     # --- interop with the batch screen -------------------------------------
     def merged_with(self, batch_counts):
         """Sketch counts + batch-screen bucket counts (same table format)."""

@@ -21,6 +21,7 @@ hash-screen keep mask, exactly as on the batch path.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import NamedTuple
@@ -33,6 +34,7 @@ from repro.core import sparsity
 from repro.stream import counts as counts_lib
 from repro.stream import delta as delta_lib
 from repro.stream.store import PatientStore
+from repro.storage.codec import decode_key, encode_key
 
 
 def _pow2_bucket(n: int, pad_multiple: int) -> int:
@@ -161,7 +163,8 @@ class StreamService(SnapshotQueries):
                  pad_multiple: int = 8, fuse_duration: bool = False,
                  bucket_days: int = 30, max_slot_events: int = 512,
                  device=None, telemetry=None, shard_tag: int | None = None,
-                 retrace_tracker=None):
+                 retrace_tracker=None, disk_bytes: int | None = None,
+                 disk_dir: str | None = None):
         self.tick_patients = tick_patients
         self.max_slot_events = max_slot_events
         self.codec = codec
@@ -173,9 +176,14 @@ class StreamService(SnapshotQueries):
         self.obs = telemetry if telemetry is not None else obs_lib.NOOP
         self.track = "stream" if shard_tag is None else f"shard{shard_tag}"
         labels = {} if shard_tag is None else {"shard": shard_tag}
+        if disk_dir is not None and shard_tag is not None:
+            # one blockstore per shard: a shared segment file would
+            # interleave two shards' appends
+            disk_dir = os.path.join(disk_dir, f"shard{shard_tag}")
         self.store = PatientStore(pad_multiple=pad_multiple,
                                   budget_bytes=budget_bytes, device=device,
-                                  telemetry=self.obs, labels=labels)
+                                  telemetry=self.obs, labels=labels,
+                                  disk_bytes=disk_bytes, disk_dir=disk_dir)
         self.sketch = counts_lib.OnlineSupportSketch(n_buckets_log2,
                                                      device=device,
                                                      telemetry=self.obs,
@@ -184,6 +192,7 @@ class StreamService(SnapshotQueries):
         self._corpus: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
         self._snap: Snapshot | None = None   # cache, invalidated per tick
         self.stats: list[TickStats] = []
+        self._ticks_restored = 0    # ticks before the checkpoint we resumed
         # a sharded service shares one tracker across shards (the jit
         # caches are process-global; per-shard trackers would each count
         # the same compilation)
@@ -364,6 +373,12 @@ class StreamService(SnapshotQueries):
             out.append(self.tick())
         return out
 
+    @property
+    def n_ticks(self) -> int:
+        """Lifetime tick count, surviving checkpoint/restore (``stats``
+        holds only the ticks since this process started)."""
+        return self._ticks_restored + len(self.stats)
+
     def sample_metrics(self) -> None:
         """Set the snapshot-time gauges that are too costly per tick:
         plane occupancy / byte gauges (host ints) and the sketch bucket
@@ -423,6 +438,47 @@ class StreamService(SnapshotQueries):
         if not out_seq:
             return np.zeros(0, np.int64), np.zeros(0, np.int32)
         return np.concatenate(out_seq), np.concatenate(out_dur)
+
+    # --- checkpoint ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Everything a restarted service needs to continue byte-identically:
+        store residency (planes, tiers, clocks), the sketch, queued deltas
+        in arrival order, and the flat mined corpus (concatenated — block
+        boundaries are an internal detail; flat order is what snapshots
+        expose and compaction already collapses them)."""
+        if self._corpus:
+            seq = np.concatenate([c[0] for c in self._corpus])
+            dur = np.concatenate([c[1] for c in self._corpus])
+            pat = np.concatenate([c[2] for c in self._corpus]).astype(np.int32)
+        else:
+            seq = np.zeros(0, np.int64)
+            dur = pat = np.zeros(0, np.int32)
+        return {
+            "store": self.store.state_dict(),
+            "sketch": self.sketch.state_dict(),
+            "queue": [{"key": encode_key(d.key), "dates": d.dates,
+                       "phenx": d.phenx} for d in self.queue],
+            "corpus": {"seq": seq, "dur": dur, "patient": pat},
+            "n_ticks": self.n_ticks,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.store.load_state_dict(state["store"])
+        self.sketch.load_state_dict(state["sketch"])
+        self.queue = deque(
+            Delta(decode_key(d["key"]),
+                  np.asarray(d["dates"], np.int32),
+                  np.asarray(d["phenx"], np.int32))
+            for d in state["queue"])
+        corpus = state["corpus"]
+        seq = np.asarray(corpus["seq"], np.int64)
+        self._corpus = ([(seq, np.asarray(corpus["dur"], np.int32),
+                          np.asarray(corpus["patient"], np.int32))]
+                        if len(seq) else [])
+        # stats carry wall-clock timings, which are not state; only the
+        # lifetime tick count survives a restore (checkpoint step numbering)
+        self._ticks_restored = int(state.get("n_ticks", 0))
+        self._snap = None
 
     # --- snapshot / queries -------------------------------------------------
     def snapshot(self) -> Snapshot:

@@ -61,8 +61,9 @@ from repro.core import chunking, sparsity
 from repro.data import pipeline
 from repro.distributed.sharding import merge_sharded_counts
 from repro.launch.mesh import shard_devices
-from repro.stream.service import Snapshot, SnapshotQueries, StreamService, \
-    TickStats
+from repro.stream.service import PatientState, Snapshot, SnapshotQueries, \
+    StreamService, TickStats
+from repro.storage.codec import decode_key, encode_key
 
 PLACEMENTS = ("host", "devices")
 
@@ -352,14 +353,11 @@ class ShardedStreamService(SnapshotQueries):
 
     def _patient_costs(self, svc: StreamService) -> dict:
         """Per-patient mining cost on one shard: n^2 * BYTES_PER_PAIR over
-        held patients (resident via cursors, spilled via host copies) —
-        the dense pair-slab model of chunking / store eviction."""
-        nev = np.asarray(svc.store.nevents)
-        costs = {k: int(nev[r]) ** 2 * chunking.BYTES_PER_PAIR
-                 for k, r in svc.store.rows.items()}
-        for k, (ph, _) in svc.store._spilled.items():
-            costs[k] = len(ph) ** 2 * chunking.BYTES_PER_PAIR
-        return costs
+        held patients (resident, host-spilled, or disk-demoted; disk
+        counts come from the block index, no decode) — the dense
+        pair-slab model of chunking / store eviction."""
+        return {k: n ** 2 * chunking.BYTES_PER_PAIR
+                for k, n in svc.store.event_counts().items()}
 
     def shard_loads(self) -> list[int]:
         """Resident pair-cost bytes per shard (the rebalance signal)."""
@@ -460,6 +458,60 @@ class ShardedStreamService(SnapshotQueries):
         for svc in self.shards:
             svc.sample_metrics()
         self._m_pending.set(sum(len(p) for p in self._pending_admits))
+
+    # --- checkpoint ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Whole-sharded-service state: every shard's service state plus
+        the cross-shard pieces a restored process needs to continue
+        byte-identically — router pins (sticky-until-migrated homes),
+        global pid table, *in-flight* migration payloads (pending admits
+        are captured, not flushed: a checkpoint must not advance the
+        schedule), migration history, and the tick counter that phases
+        rebalancing."""
+        def pack_patient(st: PatientState) -> dict:
+            return {"key": encode_key(st.key),
+                    "phenx": np.asarray(st.phenx),
+                    "date": np.asarray(st.date),
+                    "seq_ids": np.asarray(st.seq_ids),
+                    "corpus_seq": np.asarray(st.corpus_seq),
+                    "corpus_dur": np.asarray(st.corpus_dur)}
+        return {
+            "shards": [svc.state_dict() for svc in self.shards],
+            "router_pinned": [[encode_key(k), int(s)]
+                              for k, s in self.router.pinned.items()],
+            "pids": [[encode_key(k), int(p)] for k, p in self.pids.items()],
+            "pending_admits": [[pack_patient(st) for st in p]
+                               for p in self._pending_admits],
+            "migrations": [[encode_key(k), int(a), int(b)]
+                           for k, a, b in self.migrations],
+            "tick_count": self._tick_count,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        if len(state["shards"]) != self.n_shards:
+            raise ValueError(f"checkpoint has {len(state['shards'])} shards, "
+                             f"service has {self.n_shards}")
+        for svc, st in zip(self.shards, state["shards"]):
+            svc.load_state_dict(st)
+        self.router.pinned = {decode_key(k): int(s)
+                              for k, s in state["router_pinned"]}
+        self.pids = {decode_key(k): int(p) for k, p in state["pids"]}
+        self._pending_admits = [
+            [PatientState(decode_key(d["key"]),
+                          np.asarray(d["phenx"], np.int32),
+                          np.asarray(d["date"], np.int32),
+                          np.asarray(d["seq_ids"], np.int64),
+                          np.asarray(d["corpus_seq"], np.int64),
+                          np.asarray(d["corpus_dur"], np.int32))
+             for d in p]
+            for p in state["pending_admits"]]
+        self._pending_keys = {st.key: s
+                              for s, p in enumerate(self._pending_admits)
+                              for st in p}
+        self.migrations = [(decode_key(k), int(a), int(b))
+                           for k, a, b in state["migrations"]]
+        self._tick_count = int(state["tick_count"])
+        self._snap = None
 
     # --- snapshot / queries -------------------------------------------------
     def _global_pids(self, svc: StreamService, local_pat: np.ndarray):

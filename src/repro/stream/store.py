@@ -18,9 +18,11 @@ partitioning):
     replanned with ``chunking.plan_chunks`` over patients in
     most-recently-touched-first order; everything past the first chunk
     (the maximal recent prefix that fits the budget under the same
-    ``BYTES_PER_PAIR`` cost model as batch chunking) is spilled to host
-    memory.  Re-admission restores the spilled history, so delta mining
-    is byte-budgeted but exact.
+    ``BYTES_PER_PAIR`` cost model as batch chunking) is spilled to the
+    host tier; when a disk budget is set, the oldest host spills demote
+    further into the compressed disk tier (storage/tiers) under the same
+    cost model.  Re-admission restores the spilled history from
+    whichever tier holds it, so delta mining is byte-budgeted but exact.
   * **handoff** — ``extract`` withdraws a patient entirely (shard
     migration), returning its history in the host-spill format;
     ``admit_state`` is the receiving end and lands the history in the
@@ -44,6 +46,8 @@ import numpy as np
 
 from repro import obs as obs_lib
 from repro.core import chunking
+from repro.storage import tiers as tiers_lib
+from repro.storage.codec import decode_key, encode_key
 
 
 @functools.partial(jax.jit, donate_argnums=())
@@ -74,9 +78,12 @@ class PatientStore:
 
     def __init__(self, pad_multiple: int = 8, budget_bytes: int | None = None,
                  init_patients: int = 8, init_events: int = 8, device=None,
-                 telemetry=None, labels: dict | None = None):
+                 telemetry=None, labels: dict | None = None,
+                 disk_bytes: int | None = None, disk_dir: str | None = None,
+                 dictionary=None):
         self.pad_multiple = pad_multiple
         self.budget_bytes = budget_bytes
+        self.disk_bytes = disk_bytes
         self.device = device
         self.obs = telemetry if telemetry is not None else obs_lib.NOOP
         lbl = labels or {}
@@ -92,6 +99,7 @@ class PatientStore:
         self._m_occupancy = m.gauge("store.plane_occupancy", **lbl)
         self._m_resident_cost = m.gauge("store.resident_pair_bytes", **lbl)
         self._m_budget = m.gauge("store.budget_bytes", **lbl)
+        self._m_demotions = m.counter("storage.demotions", **lbl)
         self.phenx = jnp.zeros((init_patients, init_events), jnp.int32)
         self.date = jnp.zeros((init_patients, init_events), jnp.int32)
         self.nevents = jnp.zeros(init_patients, jnp.int32)
@@ -106,7 +114,14 @@ class PatientStore:
         self._touch = np.zeros(init_patients, np.int64)
         self._clock = 0
         self._next_pid = 0            # pids are never reused after extract
-        self._spilled: dict = {}      # key -> (phenx, date) host copies
+        # residency walk below the device planes: host, then (optional) disk
+        self.host = tiers_lib.HostTier(self.obs, lbl)
+        self.disk = (tiers_lib.DiskTier(disk_dir, dictionary=dictionary,
+                                        telemetry=self.obs, labels=lbl)
+                     if disk_bytes is not None or disk_dir is not None
+                     else None)
+        self._tiers: list = ([self.host, self.disk]
+                             if self.disk is not None else [self.host])
 
     # --- capacity -----------------------------------------------------------
     @property
@@ -172,8 +187,9 @@ class PatientStore:
             if k not in self.pids:
                 self.pids[k] = self._next_pid
                 self._next_pid += 1
-            if k in self._spilled:
-                restored.append((row, *self._spilled.pop(k)))
+            tier = self.tier_holding(k)
+            if tier is not None:
+                restored.append((row, *tier.restore(k)))
         if restored:
             d = max(len(ph) for _, ph, _ in restored)
             self.ensure_event_capacity(d)
@@ -238,15 +254,38 @@ class PatientStore:
         for i, row in enumerate(victims):
             key = self.row_key.pop(int(row))
             n = int(nn[i])
-            self._spilled[key] = (ph[i, :n], dt[i, :n])
+            self.host.hold(key, ph[i, :n], dt[i, :n])
             del self.rows[key]
             self._free.append(int(row))
             evicted.append(key)
         self.nevents = self.nevents.at[jnp.asarray(victims)].set(0)
+        self._demote_over_budget()
         self._m_evictions.inc(len(evicted))
         self._m_resident.set(len(self.rows))
-        self._m_spilled.set(len(self._spilled))
+        self._m_spilled.set(self.spilled_count)
         return evicted
+
+    def _demote_over_budget(self) -> None:
+        """Walk the host tier oldest-spill-first, demoting histories to the
+        compressed disk tier until the host spill working set fits
+        ``disk_bytes`` — the same n^2 * BYTES_PER_PAIR cost model as the
+        device budget, applied one boundary down.  No disk tier (or no
+        budget) means the host tier is unbounded, the pre-tier behavior."""
+        if self.disk is None or self.disk_bytes is None:
+            return
+        counts = self.host.event_counts()
+        cost = sum(n * n for n in counts.values()) * chunking.BYTES_PER_PAIR
+        demoted = 0
+        for key in self.host.keys():
+            if cost <= self.disk_bytes:
+                break
+            ph, dt = self.host.peek(key)
+            self.disk.hold(key, ph, dt)
+            self.host.drop(key)
+            cost -= counts[key] ** 2 * chunking.BYTES_PER_PAIR
+            demoted += 1
+        if demoted:
+            self._m_demotions.inc(demoted)
 
     # --- migration handoff --------------------------------------------------
     def extract(self, key) -> tuple[int, np.ndarray, np.ndarray]:
@@ -271,7 +310,7 @@ class PatientStore:
             self.nevents = self.nevents.at[row].set(0)
             self._free.append(row)
         else:
-            ph, dt = self._spilled.pop(key)
+            ph, dt = self.tier_holding(key).restore(key)
         pid = self.pids.pop(key)
         self.shrink_to_fit()
         return pid, ph, dt
@@ -286,8 +325,8 @@ class PatientStore:
         pid = self._next_pid
         self._next_pid += 1
         self.pids[key] = pid
-        self._spilled[key] = (np.asarray(phenx, np.int32).reshape(-1),
-                              np.asarray(date, np.int32).reshape(-1))
+        self.host.hold(key, phenx, date)
+        self._demote_over_budget()
         return pid
 
     def shrink_to_fit(self) -> None:
@@ -328,13 +367,115 @@ class PatientStore:
             int((nev.astype(np.int64) ** 2).sum()) * chunking.BYTES_PER_PAIR)
         self._m_budget.set(self.budget_bytes or 0)
         self._m_resident.set(len(self.rows))
-        self._m_spilled.set(len(self._spilled))
+        self._m_spilled.set(self.spilled_count)
 
     # --- introspection ------------------------------------------------------
+    @property
+    def spilled_count(self) -> int:
+        """Patients held below the device planes (all tiers)."""
+        return sum(len(t) for t in self._tiers)
+
+    def tier_holding(self, key):
+        """The residency tier currently holding ``key``, or None if the
+        patient is device-resident (or unknown)."""
+        for tier in self._tiers:
+            if key in tier:
+                return tier
+        return None
+
+    def tier_of(self, key) -> str | None:
+        """'device' / 'host' / 'disk' for a held patient, None if unknown."""
+        if key in self.rows:
+            return "device"
+        tier = self.tier_holding(key)
+        return tier.name if tier is not None else None
+
+    def held_keys(self) -> list:
+        """Keys held below the device planes, promotion-order (host tier
+        first, oldest spill first)."""
+        return [k for tier in self._tiers for k in tier.keys()]
+
+    def iter_held(self):
+        """Yield ``(key, phenx, date)`` for every non-resident patient
+        without promoting it (disk blocks are decoded, not withdrawn)."""
+        for tier in self._tiers:
+            for k in tier.keys():
+                ph, dt = tier.peek(k)
+                yield k, ph, dt
+
+    def event_counts(self) -> dict:
+        """Per-patient event counts across every tier — resident rows from
+        the device cursors, host copies by length, disk blocks from the
+        index alone (no decode): the shard cost model's one choke point."""
+        nev = np.asarray(self.nevents)
+        counts = {k: int(nev[r]) for k, r in self.rows.items()}
+        for tier in self._tiers:
+            counts.update(tier.event_counts())
+        return counts
+
     def history(self, key) -> tuple[np.ndarray, np.ndarray]:
-        """(phenx, date) events stored for a patient (resident or spilled)."""
-        if key in self._spilled:
-            return self._spilled[key]
+        """(phenx, date) events stored for a patient (resident or held)."""
+        tier = self.tier_holding(key)
+        if tier is not None:
+            return tier.peek(key)
         row = self.rows[key]
         n = int(self.nevents[row])
         return np.asarray(self.phenx[row, :n]), np.asarray(self.date[row, :n])
+
+    # --- checkpoint ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Full residency state as a pack_tree-able tree.  Everything that
+        makes continuation byte-identical is captured: plane contents *and
+        shapes* (jit retrace stability), row assignments, the free-list
+        order, LRU clocks, pid watermark, and every held history with its
+        tier, so a restored store resumes the exact residency walk."""
+        held = []
+        for tier in self._tiers:
+            for k in tier.keys():
+                ph, dt = tier.peek(k)
+                held.append({"key": encode_key(k), "tier": tier.name,
+                             "phenx": np.asarray(ph), "date": np.asarray(dt)})
+        return {
+            "phenx": np.asarray(self.phenx),
+            "date": np.asarray(self.date),
+            "nevents": np.asarray(self.nevents),
+            "touch": self._touch.copy(),
+            "clock": self._clock,
+            "next_pid": self._next_pid,
+            "rows": [[encode_key(k), int(r)] for k, r in self.rows.items()],
+            "pids": [[encode_key(k), int(p)] for k, p in self.pids.items()],
+            "free": [int(r) for r in self._free],
+            "held": held,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Inverse of :meth:`state_dict` (tier budgets/config come from the
+        constructor, not the checkpoint)."""
+        phenx = np.asarray(state["phenx"], np.int32)
+        date = np.asarray(state["date"], np.int32)
+        nevents = np.asarray(state["nevents"], np.int32)
+        self.phenx = jnp.asarray(phenx)
+        self.date = jnp.asarray(date)
+        self.nevents = jnp.asarray(nevents)
+        if self.device is not None:
+            self.phenx = jax.device_put(self.phenx, self.device)
+            self.date = jax.device_put(self.date, self.device)
+            self.nevents = jax.device_put(self.nevents, self.device)
+        self._touch = np.asarray(state["touch"], np.int64).copy()
+        self._clock = int(state["clock"])
+        self._next_pid = int(state["next_pid"])
+        self.rows = {decode_key(k): int(r) for k, r in state["rows"]}
+        self.pids = {decode_key(k): int(p) for k, p in state["pids"]}
+        self.row_key = {r: k for k, r in self.rows.items()}
+        self._free = [int(r) for r in state["free"]]
+        for tier in self._tiers:
+            for k in tier.keys():
+                tier.drop(k)
+        for entry in state["held"]:
+            key = decode_key(entry["key"])
+            tier = (self.disk
+                    if entry["tier"] == "disk" and self.disk is not None
+                    else self.host)
+            tier.hold(key, entry["phenx"], entry["date"])
+        self._m_resident.set(len(self.rows))
+        self._m_spilled.set(self.spilled_count)

@@ -42,30 +42,59 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
     return path
 
 
-_async_thread: threading.Thread | None = None
+class Saver:
+    """Async checkpoint writer with *instance-scoped* pending state.
+
+    The pre-refactor module held one global pending thread, so two
+    concurrent savers (two sessions, or a trainer plus a streaming
+    service) would join and forget *each other's* writes — ``wait()`` on
+    one could drop the other's still-unstarted thread handle.  Each Saver
+    owns its own pending thread and a lock, so independent savers never
+    interfere; the module-level ``save_async``/``wait`` remain as shims
+    over a default instance."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+
+    def save_async(self, ckpt_dir: str, step: int, tree,
+                   extra: dict | None = None) -> None:
+        """Snapshot to host now, write in the background."""
+        leaves, _ = _flatten(tree)
+        hosted = [np.asarray(x) for x in leaves]  # device->host happens here
+        unflat = jax.tree_util.tree_structure(tree)
+
+        def _write():
+            save(ckpt_dir, step,
+                 jax.tree_util.tree_unflatten(unflat, hosted), extra)
+
+        t = threading.Thread(target=_write, daemon=True)
+        # join-then-start under the lock: writes through one Saver are
+        # serialized, and a concurrent wait() can never observe (or join)
+        # a not-yet-started thread
+        with self._lock:
+            if self._thread is not None:
+                self._thread.join()
+            t.start()
+            self._thread = t
+
+    def wait(self) -> None:
+        with self._lock:
+            if self._thread is not None:
+                self._thread.join()
+                self._thread = None
+
+
+_DEFAULT_SAVER = Saver()
 
 
 def save_async(ckpt_dir: str, step: int, tree, extra: dict | None = None):
-    """Snapshot to host now, write in the background."""
-    global _async_thread
-    wait()
-    leaves, treedef = _flatten(tree)
-    hosted = [np.asarray(x) for x in leaves]  # device->host happens here
-    unflat = jax.tree_util.tree_structure(tree)
-
-    def _write():
-        save(ckpt_dir, step,
-             jax.tree_util.tree_unflatten(unflat, hosted), extra)
-
-    _async_thread = threading.Thread(target=_write, daemon=True)
-    _async_thread.start()
+    """Module-level shim over a process-default :class:`Saver`."""
+    _DEFAULT_SAVER.save_async(ckpt_dir, step, tree, extra)
 
 
 def wait():
-    global _async_thread
-    if _async_thread is not None:
-        _async_thread.join()
-        _async_thread = None
+    _DEFAULT_SAVER.wait()
 
 
 def latest(ckpt_dir: str) -> str | None:
@@ -74,6 +103,16 @@ def latest(ckpt_dir: str) -> str | None:
     steps = sorted(d for d in os.listdir(ckpt_dir)
                    if d.startswith("step_") and not d.endswith(".tmp"))
     return os.path.join(ckpt_dir, steps[-1]) if steps else None
+
+
+def load(path: str) -> tuple[list, dict]:
+    """Load a checkpoint's raw leaves + manifest without a reference tree
+    (the session checkpoint format stores its structure in ``extra``)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    z = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [z[f"a{i}"] for i in range(manifest["n_leaves"])]
+    return leaves, manifest
 
 
 def restore(path: str, tree_like):

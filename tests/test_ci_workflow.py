@@ -139,6 +139,21 @@ def test_observability_gate_present(workflow, suites):
     assert "0.03" in runs
 
 
+def test_nightly_checkpoint_resume_drill(workflow, suites):
+    """The nightly must kill a checkpointing replay mid-run and resume it
+    across a real process boundary, diffing query results against an
+    uninterrupted run — and the storage_tiering suite must be registered
+    (so bench-smoke regenerates BENCH_storage_tiering.json per PR)."""
+    assert "storage_tiering" in suites
+    slow = workflow["jobs"]["slow-nightly"]
+    runs = " ".join(s.get("run", "") for s in slow["steps"])
+    assert "--checkpoint-dir" in runs and "--resume" in runs
+    assert "--stop-after-wave" in runs
+    assert "--disk-bytes" in runs, \
+        "the resume drill must exercise the compressed disk tier"
+    assert "diff " in runs, "resumed output is never compared"
+
+
 def test_nightly_uploads_trace_artifact(workflow):
     """The nightly chaos leg must produce an inspectable Chrome trace: a
     sharded telemetry-on replay with --trace-out on forced host devices,

@@ -1,0 +1,378 @@
+"""Tiered storage: codec exactness, blockstore durability, tier walk,
+checkpoint state trees, and the Saver concurrency contract.
+
+The codec invariant everything above relies on is *exact roundtrip for any
+int32 input* — not just clinically-shaped monotone dates — so the property
+tests here throw adversarial blocks at it (empty, single-event, duplicate
+timestamps, unsorted dates, int32 extremes, dictionary escapes).  The
+hypothesis variants explore deeper when hypothesis is installed; seeded
+loops cover offline environments.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.storage import blockstore as blockstore_lib
+from repro.storage.blockstore import CompressedBlockStore
+from repro.storage.codec import (CodeDictionary, decode_block, decode_key,
+                                 encode_block, encode_key, varint_decode,
+                                 varint_encode, zigzag_decode, zigzag_encode)
+from repro.storage.state import pack_tree, unpack_tree
+from repro.storage.tiers import DiskTier, HostTier, ResidencyTier
+from repro.stream.store import PatientStore
+from repro.training import checkpoint as ckpt_lib
+
+I32 = np.iinfo(np.int32)
+
+
+def _roundtrip(phenx, date, dictionary=None):
+    blob = encode_block(phenx, date, dictionary)
+    ph, dt = decode_block(blob, dictionary)
+    assert ph.dtype == np.int32 and dt.dtype == np.int32
+    np.testing.assert_array_equal(ph, np.asarray(phenx, np.int32))
+    np.testing.assert_array_equal(dt, np.asarray(date, np.int32))
+    return blob
+
+
+# --- codec ------------------------------------------------------------------
+def test_codec_roundtrip_edge_blocks():
+    empty = np.zeros(0, np.int32)
+    _roundtrip(empty, empty)                            # empty history
+    _roundtrip([7], [100])                              # single event
+    _roundtrip([3, 3, 3], [50, 50, 50])                 # duplicate timestamps
+    _roundtrip([1, 2, 3], [300, 200, 100])              # unsorted (neg deltas)
+    _roundtrip([I32.min, I32.max, 0, -1],
+               [I32.max, I32.min, 0, -1])               # int32 extremes
+
+
+def test_codec_roundtrip_seeded_random():
+    rng = np.random.default_rng(42)
+    for trial in range(200):
+        n = int(rng.integers(0, 40))
+        if rng.random() < 0.5:   # clinical shape: small codes, sorted dates
+            ph = rng.integers(0, 200, n).astype(np.int32)
+            dt = np.sort(rng.integers(0, 2000, n)).astype(np.int32)
+        else:                    # adversarial: full int32 range, unsorted
+            ph = rng.integers(I32.min, I32.max, n, dtype=np.int64) \
+                .astype(np.int32)
+            dt = rng.integers(I32.min, I32.max, n, dtype=np.int64) \
+                .astype(np.int32)
+        d = (CodeDictionary.from_histories([ph[: n // 2]])
+             if rng.random() < 0.5 else None)
+        _roundtrip(ph, dt, d)
+
+
+@given(st.lists(st.tuples(st.integers(I32.min, I32.max),
+                          st.integers(I32.min, I32.max)), max_size=60),
+       st.booleans())
+def test_codec_roundtrip_hypothesis(events, use_dict):
+    ph = np.asarray([e[0] for e in events], np.int32)
+    dt = np.asarray([e[1] for e in events], np.int32)
+    d = CodeDictionary.from_histories([ph[::2]]) if use_dict else None
+    _roundtrip(ph, dt, d)
+
+
+def test_codec_compresses_clinical_shape():
+    """>=3x on synthea-shaped monotone histories (the bench floor)."""
+    rng = np.random.default_rng(0)
+    raw = enc = 0
+    d = CodeDictionary(list(range(200)))
+    for _ in range(50):
+        n = int(rng.integers(10, 60))
+        ph = rng.integers(0, 200, n).astype(np.int32)
+        dt = np.sort(rng.integers(0, 700, n)).astype(np.int32)
+        enc += len(encode_block(ph, dt, d))
+        raw += 8 * n
+    assert raw / enc >= 3.0
+
+
+def test_varint_vectorized_matches_scalar():
+    rng = np.random.default_rng(3)
+    vals = np.concatenate([
+        np.zeros(3, np.uint64),
+        rng.integers(0, 1 << 35, 100, dtype=np.uint64),
+        np.asarray([1, 127, 128, (1 << 35) - 1], np.uint64)])
+    buf = varint_encode(vals)
+    np.testing.assert_array_equal(varint_decode(buf, len(vals)), vals)
+    with pytest.raises(ValueError):
+        varint_encode(np.asarray([1 << 35], np.uint64))
+    with pytest.raises(ValueError):
+        varint_decode(buf[:1], len(vals))   # truncated stream
+
+
+def test_zigzag_small_magnitudes_stay_small():
+    v = np.asarray([0, -1, 1, -2, 2], np.int64)
+    u = zigzag_encode(v)
+    np.testing.assert_array_equal(u, [0, 1, 2, 3, 4])
+    np.testing.assert_array_equal(zigzag_decode(u), v)
+
+
+def test_dictionary_escape_side_stream():
+    d = CodeDictionary([10, 20, 30])
+    ph = np.asarray([10, 999, 20, -5, 30], np.int32)   # 999/-5 escape
+    dt = np.asarray([1, 2, 3, 4, 5], np.int32)
+    _roundtrip(ph, dt, d)
+    assert CodeDictionary.from_json(d.to_json()) == d
+    with pytest.raises(ValueError):
+        decode_block(encode_block(ph, dt, d), None)  # dict required
+
+
+def test_encode_key_typed_roundtrip():
+    for key in [0, -3, 2**40, "p1", ("a", 7), (1, ("x", 2))]:
+        assert decode_key(json.loads(json.dumps(encode_key(key)))) == key
+    assert decode_key(encode_key(np.int32(5))) == 5
+    with pytest.raises(TypeError):
+        encode_key(True)
+    with pytest.raises(TypeError):
+        encode_key(3.5)
+
+
+# --- blockstore -------------------------------------------------------------
+def test_blockstore_persist_reopen(tmp_path):
+    root = str(tmp_path / "bs")
+    d = CodeDictionary([1, 2, 3])
+    bs = CompressedBlockStore(root, dictionary=d)
+    bs.put("a", [1, 2], [10, 20])
+    bs.put(("t", 5), [3], [7])
+    bs.close()
+    re = CompressedBlockStore(root)          # dictionary loads from index
+    assert re.dictionary == d
+    ph, dt = re.get("a")
+    assert ph.tolist() == [1, 2] and dt.tolist() == [10, 20]
+    assert re.n_events(("t", 5)) == 1
+    assert len(re) == 2 and set(re.keys()) == {"a", ("t", 5)}
+    with pytest.raises(ValueError):
+        CompressedBlockStore(root, dictionary=CodeDictionary([9]))
+
+
+def test_blockstore_checksum_detects_corruption(tmp_path):
+    root = str(tmp_path / "bs")
+    bs = CompressedBlockStore(root)
+    bs.put("k", list(range(20)), list(range(20)))
+    bs.close()
+    with open(str(tmp_path / "bs" / blockstore_lib.DATA_NAME), "r+b") as f:
+        f.seek(4)
+        f.write(b"\xff\xff")
+    re = CompressedBlockStore(root)
+    with pytest.raises(IOError):
+        re.get("k")
+
+
+def test_blockstore_compaction_bounds_garbage(tmp_path, monkeypatch):
+    monkeypatch.setattr(blockstore_lib, "COMPACT_FLOOR_BYTES", 64)
+    bs = CompressedBlockStore(str(tmp_path / "bs"))
+    keep = {}
+    rng = np.random.default_rng(5)
+    for i in range(60):
+        ph = rng.integers(0, 50, 10).astype(np.int32)
+        dt = np.sort(rng.integers(0, 300, 10)).astype(np.int32)
+        bs.put(i, ph, dt)
+        keep[i] = (ph, dt)
+        if i >= 3:                    # churn: drop an old block each round
+            bs.discard(i - 3)
+            del keep[i - 3]
+    assert bs.dead_bytes <= max(bs.bytes_held, 64)
+    for k, (ph, dt) in keep.items():  # survivors intact post-compaction
+        got = bs.get(k)
+        assert got[0].tolist() == ph.tolist()
+        assert got[1].tolist() == dt.tolist()
+
+
+# --- tiers ------------------------------------------------------------------
+@pytest.mark.parametrize("tier_cls", [HostTier, DiskTier])
+def test_tier_contract(tier_cls, tmp_path):
+    tier = (DiskTier(str(tmp_path / "d")) if tier_cls is DiskTier
+            else HostTier())
+    assert isinstance(tier, ResidencyTier)
+    tier.hold("a", [1, 2], [5, 6])
+    tier.hold("b", [3], [9])
+    assert "a" in tier and len(tier) == 2
+    assert tier.keys() == ["a", "b"]          # insertion order: LRU walk
+    tier.hold("a", [1, 2], [5, 6])            # re-hold moves to the back
+    assert tier.keys() == ["b", "a"]
+    assert tier.event_counts() == {"b": 1, "a": 2}
+    ph, dt = tier.peek("b")
+    assert ph.tolist() == [3] and "b" in tier  # peek does not withdraw
+    ph, dt = tier.restore("b")
+    assert ph.tolist() == [3] and "b" not in tier
+    assert tier.bytes_held() > 0
+    tier.drop("a")
+    assert len(tier) == 0
+
+
+# --- tiered store -----------------------------------------------------------
+def _fill_store(store, rng, n=12):
+    hist = {}
+    for k in range(n):
+        m = int(rng.integers(3, 15))
+        ph = rng.integers(1, 50, m).astype(np.int32)
+        dt = np.sort(rng.integers(0, 300, m)).astype(np.int32)
+        hist[k] = (ph, dt)
+        rows, _ = store.admit([k])
+        store.append(rows, ph[None], dt[None], np.asarray([m], np.int32))
+        store.evict_over_budget()
+    return hist
+
+
+def test_store_demotes_host_spill_to_disk():
+    rng = np.random.default_rng(0)
+    store = PatientStore(budget_bytes=4000, disk_bytes=2000)
+    hist = _fill_store(store, rng)
+    tiers = {k: store.tier_of(k) for k in hist}
+    assert "disk" in tiers.values(), "disk budget never demoted"
+    assert None not in tiers.values()
+    for k, (ph, dt) in hist.items():          # every tier restores exactly
+        got = store.history(k)
+        assert got[0].tolist() == ph.tolist()
+        assert got[1].tolist() == dt.tolist()
+    assert store.event_counts() == {k: len(v[0]) for k, v in hist.items()}
+    held = {k for k, _, _ in store.iter_held()}
+    assert held == {k for k in hist if k not in store.rows}
+    for k in hist:                            # promotion through admit
+        store.admit([k])
+        assert store.tier_of(k) == "device"
+        got = store.history(k)
+        assert got[0].tolist() == hist[k][0].tolist()
+
+
+def test_store_without_disk_budget_keeps_host_tier_only():
+    rng = np.random.default_rng(1)
+    store = PatientStore(budget_bytes=4000)
+    hist = _fill_store(store, rng)
+    assert store.disk is None
+    assert all(store.tier_of(k) in ("device", "host") for k in hist)
+
+
+def test_store_extract_from_disk_tier():
+    rng = np.random.default_rng(2)
+    store = PatientStore(budget_bytes=4000, disk_bytes=0)  # everything demotes
+    hist = _fill_store(store, rng, n=6)
+    key = next(k for k in hist if store.tier_of(k) == "disk")
+    pid, ph, dt = store.extract(key)
+    assert ph.tolist() == hist[key][0].tolist()
+    assert store.tier_of(key) is None and key not in store.pids
+
+
+def test_store_state_dict_roundtrip_preserves_tiers():
+    rng = np.random.default_rng(3)
+    store = PatientStore(budget_bytes=4000, disk_bytes=2000)
+    hist = _fill_store(store, rng)
+    packed, arrays = pack_tree(store.state_dict())
+    json.dumps(packed)                         # manifest-serializable
+    other = PatientStore(budget_bytes=4000, disk_bytes=2000)
+    other.load_state_dict(unpack_tree(packed, arrays))
+    assert np.array_equal(np.asarray(store.phenx), np.asarray(other.phenx))
+    assert store.rows == other.rows and store.pids == other.pids
+    assert store._free == other._free
+    assert {k: store.tier_of(k) for k in hist} \
+        == {k: other.tier_of(k) for k in hist}
+    for k in hist:
+        a, b = store.history(k), other.history(k)
+        assert a[0].tolist() == b[0].tolist()
+        assert a[1].tolist() == b[1].tolist()
+
+
+# --- state trees ------------------------------------------------------------
+def test_pack_tree_roundtrip():
+    tree = {"a": np.arange(5), "b": [np.zeros((2, 3), np.int64), "x", None],
+            "c": {"d": np.int32(7), "e": 1.5, "f": True}}
+    packed, arrays = pack_tree(tree)
+    json.dumps(packed)
+    out = unpack_tree(packed, arrays)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["b"][0], tree["b"][0])
+    assert out["b"][1:] == ["x", None]
+    assert out["c"] == {"d": 7, "e": 1.5, "f": True}
+
+
+def test_pack_tree_rejects_non_json_leaves():
+    with pytest.raises(TypeError):
+        pack_tree({"bad": object()})
+    with pytest.raises(ValueError):
+        pack_tree({"__ndarray__": 1})
+
+
+# --- checkpoint layer -------------------------------------------------------
+def test_checkpoint_load_without_reference_tree(tmp_path):
+    arrays = [np.arange(4), np.ones((2, 2), np.float32)]
+    path = ckpt_lib.save(str(tmp_path), 3, arrays, extra={"k": "v"})
+    leaves, manifest = ckpt_lib.load(path)
+    assert manifest["extra"] == {"k": "v"} and manifest["step"] == 3
+    np.testing.assert_array_equal(leaves[0], arrays[0])
+    np.testing.assert_array_equal(leaves[1], arrays[1])
+
+
+def test_concurrent_savers_drop_no_writes(tmp_path):
+    """Two independent Savers flushing concurrently must both land (the
+    pre-refactor module-global pending thread could forget one)."""
+    savers = [ckpt_lib.Saver() for _ in range(2)]
+    dirs = [str(tmp_path / f"s{i}") for i in range(2)]
+    barrier = threading.Barrier(2)
+
+    def work(i):
+        barrier.wait()
+        for step in range(5):
+            savers[i].save_async(dirs[i], step, [np.full(8, step)])
+        savers[i].wait()
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for i in range(2):
+        path = ckpt_lib.latest(dirs[i])
+        assert path is not None and path.endswith("step_00000004")
+        leaves, _ = ckpt_lib.load(path)
+        np.testing.assert_array_equal(leaves[0], np.full(8, 4))
+
+
+def test_saver_wait_is_idempotent(tmp_path):
+    s = ckpt_lib.Saver()
+    s.wait()                                   # nothing pending: no-op
+    s.save_async(str(tmp_path), 0, [np.arange(3)])
+    s.wait()
+    s.wait()
+    assert ckpt_lib.latest(str(tmp_path)) is not None
+
+
+def test_module_shims_still_work(tmp_path):
+    ckpt_lib.save_async(str(tmp_path), 1, [np.arange(2)])
+    ckpt_lib.wait()
+    leaves, manifest = ckpt_lib.load(ckpt_lib.latest(str(tmp_path)))
+    assert manifest["step"] == 1
+
+
+def test_random_store_tier_walk_vs_dict_oracle():
+    """Chaos: random admits/appends/evicts/extracts against a plain dict
+    oracle — whatever tier a history lands in, reads stay exact."""
+    rng = np.random.default_rng(11)
+    store = PatientStore(budget_bytes=3000, disk_bytes=1000)
+    oracle: dict = {}
+    next_key = 0
+    for _ in range(150):
+        r = rng.random()
+        if r < 0.45 or not oracle:
+            k, next_key = next_key, next_key + 1
+            m = int(rng.integers(1, 10))
+            ph = rng.integers(0, 99, m).astype(np.int32)
+            dt = np.sort(rng.integers(0, 400, m)).astype(np.int32)
+            rows, _ = store.admit([k])
+            store.append(rows, ph[None], dt[None], np.asarray([m], np.int32))
+            oracle[k] = (ph, dt)
+        elif r < 0.7:
+            store.evict_over_budget()
+        elif r < 0.85:
+            k = list(oracle)[int(rng.integers(len(oracle)))]
+            _, ph, dt = store.extract(k)
+            np.testing.assert_array_equal(ph, oracle.pop(k)[0])
+        else:
+            k = list(oracle)[int(rng.integers(len(oracle)))]
+            ph, dt = store.history(k)
+            np.testing.assert_array_equal(ph, oracle[k][0])
+            np.testing.assert_array_equal(dt, oracle[k][1])
+    assert store.event_counts() == {k: len(v[0]) for k, v in oracle.items()}

@@ -19,6 +19,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.api import MiningConfig, MiningSession
 from repro.core import queries, sparsity
 from repro.stream.counts import OnlineSupportSketch
 from repro.stream.service import StreamService
@@ -270,11 +271,11 @@ def test_migrate_spilled_patient_moves_host_copy():
                                n_buckets_log2=H, budget_bytes=20_000)
     replay(db, svc, rng)
     spilled = [(s, k) for s, sv in enumerate(svc.shards)
-               for k in sv.store._spilled]
+               for k in sv.store.held_keys()]
     assert spilled, "budget never spilled anyone"
     s, key = spilled[0]
     svc.migrate(key, 1 - s)
-    assert key in svc.shards[1 - s].store._spilled
+    assert svc.shards[1 - s].store.tier_of(key) in ("host", "disk")
     assert key not in svc.shards[s].store.pids
     assert_matches_batch(svc, db, rng)
 
@@ -347,3 +348,157 @@ def test_rebalance_moves_load_off_hot_shard():
     assert moves and max(after) < max(before)
     assert sum(after) == sum(before)    # load moved, not created/lost
     assert_matches_batch(svc, db, rng)
+
+
+# --- checkpoint / resume under chaos ---------------------------------------
+# The schedule is generated up front as a deterministic op list, then split
+# at a random cut: prefix -> checkpoint -> restore into a fresh session ->
+# suffix.  The reference replays the *identical* prefix+suffix uninterrupted
+# (the flat corpus order depends on the wave schedule, so byte-identical
+# comparison requires byte-identical schedules), and both are checked
+# against the batch oracle.
+
+def _checkpoint_ops(db, rng, n_shards):
+    """Deterministic chaos schedule: submits that drain the cohort, with
+    ticks/runs/migrations/rebalances interleaved; ends fully drained."""
+    ops = []
+    cursors = np.zeros(db.n_patients, np.int64)
+    alive = [p for p in range(db.n_patients) if db.nevents[p] > 0]
+    submitted: list = []
+    while alive:
+        p = alive[int(rng.integers(len(alive)))]
+        lo = int(cursors[p])
+        hi = min(lo + int(rng.integers(1, 4)), int(db.nevents[p]))
+        ops.append(("submit", p, lo, hi))
+        if p not in submitted:
+            submitted.append(p)
+        cursors[p] = hi
+        if hi == int(db.nevents[p]):
+            alive.remove(p)
+        r = rng.random()
+        if r < 0.2:
+            ops.append(("tick",))
+        elif r < 0.35:
+            ops.append(("run",))
+        if n_shards > 1 and rng.random() < 0.2:
+            key = submitted[int(rng.integers(len(submitted)))]
+            ops.append(("migrate", key, int(rng.integers(n_shards))))
+        if n_shards > 1 and rng.random() < 0.1:
+            ops.append(("rebalance", 1.0 + float(rng.random())))
+    ops.append(("run",))
+    return ops
+
+
+def _apply_ops(session, db, ops):
+    for op in ops:
+        if op[0] == "submit":
+            _, p, lo, hi = op
+            session.submit(p, db.date[p, lo:hi], db.phenx[p, lo:hi])
+        elif op[0] == "tick":
+            session.service.tick()
+        elif op[0] == "run":
+            session.service.run()
+        elif op[0] == "migrate":
+            session.service.migrate(op[1], op[2])
+        elif op[0] == "rebalance":
+            session.service.rebalance(imbalance_threshold=op[1])
+
+
+def _assert_sessions_identical(a, b):
+    """Every observable of two sharded services matches byte-for-byte."""
+    sa, sb = a.service, b.service
+    snap_a, keys_a = sharded_triples(sa)
+    snap_b, keys_b = sharded_triples(sb)
+    assert keys_a.tolist() == keys_b.tolist()
+    assert (snap_a.seq == snap_b.seq).all()
+    assert (snap_a.dur == snap_b.dur).all()
+    assert (snap_a.counts == snap_b.counts).all()
+    assert sa.pids == sb.pids
+    assert sa.router.pinned == sb.router.pinned
+    for va, vb in zip(sa.shards, sb.shards):
+        assert va.store.rows.keys() == vb.store.rows.keys()
+        assert {k: va.store.tier_of(k) for k in va.store.pids} \
+            == {k: vb.store.tier_of(k) for k in vb.store.pids}
+
+
+@pytest.mark.parametrize("n_shards,telemetry",
+                         [(1, False), (2, False), (2, True)])
+def test_checkpoint_restore_continues_byte_identical(n_shards, telemetry,
+                                                     tmp_path):
+    """Checkpoint at a random point mid-chaos, restore into a fresh
+    session, continue — final corpus/sketch/router state byte-identical
+    to an uninterrupted run of the same schedule, and batch-exact."""
+    rng = np.random.default_rng(7_700 + 10 * n_shards + telemetry)
+    db = random_dbmart(rng, n_patients=10, max_events=18)
+    config = MiningConfig(engine="sharded", n_shards=n_shards,
+                          tick_patients=2, n_buckets_log2=H, screen="hash",
+                          budget_bytes=20_000, disk_bytes=5_000,
+                          telemetry=telemetry)
+    ops = _checkpoint_ops(db, rng, n_shards)
+    cut = int(rng.integers(1, len(ops)))
+
+    interrupted = MiningSession(config)
+    _apply_ops(interrupted, db, ops[:cut])
+    path = interrupted.checkpoint(str(tmp_path), extra={"cut": cut})
+    resumed = MiningSession.restore(path)
+    assert resumed.restore_extra == {"cut": cut}
+    assert resumed.config == config
+    _apply_ops(resumed, db, ops[cut:])
+
+    reference = MiningSession(config)
+    _apply_ops(reference, db, ops)
+
+    _assert_sessions_identical(resumed, reference)
+    assert_matches_batch(resumed.service, db, rng)
+
+
+def test_checkpoint_restore_stream_engine(tmp_path):
+    """The single-shard stream engine resumes byte-identically too (its
+    state tree has no router/migration planes)."""
+    rng = np.random.default_rng(91)
+    db = random_dbmart(rng, n_patients=8, max_events=14)
+    config = MiningConfig(tick_patients=2, n_buckets_log2=H, screen="hash",
+                          budget_bytes=20_000, disk_bytes=5_000)
+    ops = _checkpoint_ops(db, rng, n_shards=1)
+    cut = int(rng.integers(1, len(ops)))
+
+    interrupted = MiningSession(config)
+    _apply_ops(interrupted, db, ops[:cut])
+    resumed = MiningSession.restore(
+        interrupted.checkpoint(str(tmp_path)))
+    assert isinstance(resumed.service, StreamService)
+    _apply_ops(resumed, db, ops[cut:])
+
+    reference = MiningSession(config)
+    _apply_ops(reference, db, ops)
+
+    a, b = resumed.service.snapshot(), reference.service.snapshot()
+    assert (a.seq == b.seq).all() and (a.dur == b.dur).all()
+    assert (a.patient == b.patient).all()
+    assert (a.counts == b.counts).all()
+    assert resumed.service.store.pids == reference.service.store.pids
+    assert resumed.service.n_ticks == reference.service.n_ticks
+
+
+def test_checkpoint_is_a_snapshot_not_a_barrier(tmp_path):
+    """Checkpointing must not advance the schedule: queued deltas and
+    pending migration admits are captured, not flushed, so checkpointing
+    after every op still yields the uninterrupted run's bytes."""
+    rng = np.random.default_rng(17)
+    db = random_dbmart(rng, n_patients=6, max_events=10)
+    config = MiningConfig(engine="sharded", n_shards=2, tick_patients=2,
+                          n_buckets_log2=H, screen="hash")
+    ops = _checkpoint_ops(db, rng, 2)
+
+    chatty = MiningSession(config)
+    for i, op in enumerate(ops):
+        _apply_ops(chatty, db, [op])
+        chatty.checkpoint(str(tmp_path), step=i)
+
+    reference = MiningSession(config)
+    _apply_ops(reference, db, ops)
+    _assert_sessions_identical(chatty, reference)
+
+    # and the *last* checkpoint restores to the same final state
+    final = MiningSession.restore(str(tmp_path))
+    _assert_sessions_identical(final, reference)
