@@ -31,6 +31,15 @@
                      must cost < 3% and change zero mined bytes
                      (``--suite observability_overhead`` writes
                      BENCH_observability_overhead.json)
+  mining_fused    -> corpus-free fused screen (screen="fused") vs the
+                     materializing mine+screen path: collect bytes
+                     asserted identical, peak working set asserted below
+                     the dense corpus under the BYTES_PER_PAIR model
+                     (and P-invariant), wall within a bounded multiple,
+                     plus the autotune sweep feeding
+                     analysis.roofline.mining_tile_plan
+                     (``--suite mining_fused`` writes
+                     BENCH_mining_fused.json)
   storage_tiering -> compressed disk tier: codec compression ratio
                      (asserted >= 3x on the synthea shape), tiered
                      ingest with disk demotion on the eviction path,
@@ -170,6 +179,13 @@ def observability_overhead_bench(small=True, out_path=None):
     observability.main(small=small, json_path=out_path, backend="jnp")
 
 
+def mining_fused_bench(small=True, out_path=None):
+    from benchmarks import mining_fused
+
+    out_path = out_path or "BENCH_mining_fused.json"
+    mining_fused.main(small=small, json_path=out_path, backend="jnp")
+
+
 def storage_tiering_bench(small=True, out_path=None):
     from benchmarks import storage_tiering
 
@@ -189,6 +205,8 @@ SUITES = {
                      api_overhead_bench),
     "observability_overhead": ("telemetry on/off ingest (< 3% ceiling)",
                                observability_overhead_bench),
+    "mining_fused": ("corpus-free fused screen vs materializing path",
+                     mining_fused_bench),
     "storage_tiering": ("compressed disk tier + checkpoint/resume "
                         "(>= 3x ratio asserted)", storage_tiering_bench),
 }

@@ -30,6 +30,15 @@ def main():
     for d in frame.top_k(8).decode():
         print(f"  {d.text:55s} support={d.support}")
 
+    # --- corpus-free screening ---------------------------------------------
+    # screen="fused" counts support in the [2^H] bucket table without ever
+    # materializing the [P, n, n] pair corpus (peak = one patient block +
+    # the table), then materializes survivors only — byte-identical to the
+    # materializing path above, asserted across every engine in CI.
+    fused = MiningSession(MiningConfig(threshold=5, screen="fused")).fit(db)
+    print(f"\ncorpus-free screen kept {fused.screen().n_kept:,} "
+          f"(same bytes, no corpus on the screen pass)")
+
     # --- streaming with checkpoint / resume --------------------------------
     # The same cohort arriving incrementally, with a byte budget tight
     # enough to spill and a disk budget demoting cold histories into the

@@ -9,6 +9,12 @@ the post-SPMD optimized HLO (compiled.as_text()) and summing operand sizes
 of all-gather / all-reduce / reduce-scatter / all-to-all /
 collective-permute ops.  MODEL_FLOPS (6*N*D train, 2*N*D inference; active
 params for MoE) over HLO FLOPs measures useful-compute fraction.
+
+This module also owns the *mining* cost model (constants shared with
+``benchmarks/mining_roofline.py``) and :func:`mining_tile_plan`, the tile
+selection the fused mine+screen kernel (``kernels/tspm_fused``) reads its
+defaults from — analytic VMEM-fit by default, measured-sweep argmin when
+the autotune rows from ``benchmarks/mining_fused.py`` are handed back in.
 """
 from __future__ import annotations
 
@@ -18,6 +24,105 @@ import re
 PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
 HBM_BW = 819e9           # bytes/s per chip
 ICI_BW = 50e9            # bytes/s per link
+
+# --- mining cost model (tSPM+ pair enumeration) -----------------------------
+# materializing pairgen traffic: two int32 phenx planes + int32 duration +
+# bool mask + amortized id pack in the XLA consumer
+MINING_BYTES_PER_PAIR = 17
+MINING_OPS_PER_PAIR = 6      # shift/or pack, sub, 3 compares for the mask
+# dense block working set on the corpus-free jnp fallback (mine_dense +
+# row-sort dedup): mirrors chunking.BYTES_PER_PAIR — 8B seq + 4B dur +
+# 1B mask, x2 sort scratch
+FUSED_BLOCK_BYTES_PER_PAIR = 26
+VMEM_BYTES = 16 << 20        # TPU v5e per-core VMEM
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningTilePlan:
+    """Tile choice for the fused mine+screen kernel (kernels/tspm_fused).
+
+    ``pb x ti x tj`` is the pair-tile grid shared with tspm_pairgen /
+    tspm_delta; ``bt`` the bucket-tile width of the VMEM-accumulated
+    [2^H] table; ``block_patients`` the host-loop patient block bounding
+    the corpus-free counting pass's working set."""
+
+    pb: int
+    ti: int
+    tj: int
+    bt: int
+    block_patients: int
+    vmem_bytes: int          # modeled per-grid-step VMEM working set
+    source: str              # 'analytic' | 'measured'
+
+
+def fused_kernel_vmem(pb: int, ti: int, tj: int, bt: int, max_events: int,
+                      chunk_i: int = 4) -> int:
+    """Modeled VMEM bytes of one fused-kernel grid step.
+
+    Rows (full-width phenx for the dedup lookback), the i/j row tiles, the
+    [Pb, T, E] dedup compare scratch, the pair-tile hash/flag planes, and
+    the [Pb, chunk_i * Tj, bt] compare-and-reduce slab of the histogram
+    accumulation loop.
+    """
+    e = max(ti, -(-max(int(max_events), 1) // ti) * ti)
+    rows = pb * e * 4                     # full phenx row block
+    tiles = pb * (ti + tj) * 4            # xi / xj row tiles
+    dedup = pb * (ti + tj) * e            # eq_i / eq_j bool scratch
+    pairs = pb * ti * tj * (4 + 4 + 1)    # hash, iota masks, first flags
+    hist = pb * chunk_i * tj * bt         # bucket compare slab (bool)
+    table = bt * 4                        # accumulator block
+    return int(rows + tiles + dedup + pairs + hist + table)
+
+
+def mining_tile_plan(max_events: int, n_buckets_log2: int, *,
+                     vmem_bytes: int = VMEM_BYTES // 2,
+                     block_bytes: int = 64 << 20,
+                     rows: list[dict] | None = None) -> MiningTilePlan:
+    """Pick (pb, ti, tj, bt, block_patients) for the fused kernel.
+
+    Analytic mode: lane-native ``ti = tj = 128`` (matching the ops-layer
+    padding), the largest power-of-two patient block whose modeled working
+    set (:func:`fused_kernel_vmem`) fits ``vmem_bytes``, ``bt = min(2^H,
+    512)`` (seq_hist's bucket-tile width), and a counting-pass patient
+    block sized so the jnp-fallback dense planes stay under ``block_bytes``
+    at ``FUSED_BLOCK_BYTES_PER_PAIR``.
+
+    Measured mode: ``rows`` are autotune sweep records (dicts with ``pb``
+    and ``wall_s``, optionally ``ti``/``tj``/``bt``, from
+    ``benchmarks/mining_fused.py``); the fastest row that still fits
+    ``vmem_bytes`` wins, falling back to the analytic choice when none fit.
+    """
+    B = 1 << n_buckets_log2
+    ti = tj = 128
+    bt = min(B, 512)
+    chosen = None
+    source = "analytic"
+    if rows:
+        fitting = [r for r in rows
+                   if fused_kernel_vmem(int(r["pb"]), int(r.get("ti", ti)),
+                                        int(r.get("tj", tj)),
+                                        int(r.get("bt", bt)), max_events)
+                   <= vmem_bytes]
+        if fitting:
+            best = min(fitting, key=lambda r: float(r["wall_s"]))
+            chosen = (int(best["pb"]), int(best.get("ti", ti)),
+                      int(best.get("tj", tj)), int(best.get("bt", bt)))
+            source = "measured"
+    if chosen is None:
+        pb = 1
+        for cand in (32, 16, 8, 4, 2, 1):
+            if fused_kernel_vmem(cand, ti, tj, bt, max_events) <= vmem_bytes:
+                pb = cand
+                break
+        chosen = (pb, ti, tj, bt)
+    pb, ti, tj, bt = chosen
+    e = max(ti, -(-max(int(max_events), 1) // ti) * ti)
+    blk = max(pb, int(block_bytes // max(e * e * FUSED_BLOCK_BYTES_PER_PAIR, 1)))
+    blk = min(-(-blk // pb) * pb, 4096)
+    return MiningTilePlan(pb=pb, ti=ti, tj=tj, bt=bt, block_patients=blk,
+                          vmem_bytes=fused_kernel_vmem(pb, ti, tj, bt,
+                                                       max_events),
+                          source=source)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,

@@ -21,7 +21,14 @@ from repro.core.encoding import CODECS
 #:   sharded — patient-sharded streaming over ``n_shards`` (stream.shard)
 ENGINES = ("batch", "chunked", "files", "stream", "sharded")
 
-SCREEN_MODES = ("sorted", "hash")
+#: Screen modes:
+#:   sorted — the paper's exact sort/mark/re-sort screen
+#:   hash   — one-sided hash-bucket screen over the materialized corpus
+#:   fused  — corpus-free: hash-bucket counts come from the fused
+#:            mine+screen kernel (kernels/tspm_fused) without ever writing
+#:            the pair corpus; survivors are materialized afterwards
+#:            (requires ``threshold``; same one-sided keep as 'hash')
+SCREEN_MODES = ("sorted", "hash", "fused")
 
 #: Shard state placement for the sharded engine:
 #:   auto    — planner picks 'devices' when the host has at least one
@@ -44,7 +51,7 @@ class MiningConfig:
 
     # --- screening --------------------------------------------------------
     threshold: int | None = None    # default support threshold for .screen()
-    screen: str = "sorted"          # 'sorted' (exact) | 'hash' (one-sided)
+    screen: str = "sorted"          # 'sorted' | 'hash' | 'fused' (see above)
     n_buckets_log2: int = 20        # hash-screen table size (2^H buckets)
 
     # --- execution --------------------------------------------------------
@@ -83,6 +90,10 @@ class MiningConfig:
         if self.screen not in SCREEN_MODES:
             raise ValueError(
                 f"unknown screen mode {self.screen!r}; one of {SCREEN_MODES}")
+        if self.screen == "fused" and self.threshold is None:
+            raise ValueError(
+                "screen='fused' materializes survivors during fit, so it "
+                "needs a threshold up front (set MiningConfig.threshold)")
         if self.engine is not None and self.engine not in ENGINES:
             raise ValueError(
                 f"unknown engine {self.engine!r}; one of {ENGINES}")
@@ -123,6 +134,8 @@ class Plan:
     n_shards: int = 1
     placement: str = "host"     # resolved (never 'auto'): shard placement
     incremental: bool = False
+    corpus_free: bool = False   # screen='fused': no [P, n, n] corpus on
+    #                             the screen pass, survivors-only alloc
 
     def __str__(self) -> str:
         lines = [
@@ -132,6 +145,9 @@ class Plan:
             f" (budget {_fmt_bytes(self.budget_bytes)})",
             f"  flat corpus : {_fmt_bytes(self.corpus_bytes)}",
         ]
+        if self.corpus_free:
+            lines.append("  screen      : corpus-free fused counting "
+                         "(pairs allocated for survivors only)")
         if self.disk_bytes is not None:
             lines.append(f"  disk tier   : host spill over "
                          f"{_fmt_bytes(self.disk_bytes)} demotes to "

@@ -228,13 +228,16 @@ class SequenceFrame:
     def screen(self, threshold: int | None = None) -> "SequenceFrame":
         """Sparsity screen at distinct-patient ``threshold`` (default: the
         config's).  Mode 'sorted' uses exact support; 'hash' the engines'
-        shared bucket table (one-sided: collisions only ever over-keep)."""
+        shared bucket table (one-sided: collisions only ever over-keep);
+        'fused' frames hold corpus-free-screened survivors and re-screen
+        against the same table (idempotent at the fit threshold, exact for
+        any higher one)."""
         thr = self.threshold if threshold is None else threshold
         if thr is None:
             raise ValueError("no threshold: pass one or set MiningConfig.threshold")
 
         def op(fr: "SequenceFrame", keep: np.ndarray) -> np.ndarray:
-            if fr.screen_mode == "hash":
+            if fr.screen_mode in ("hash", "fused"):
                 return np.asarray(sparsity.screen_hash_from_counts(
                     fr._corpus.seq, keep, fr._corpus.counts(), thr,
                     fr._corpus.n_buckets_log2))

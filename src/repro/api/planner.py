@@ -30,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.api.config import MiningConfig, Plan
+from repro.analysis import roofline
 from repro.core import chunking
 
 # flat corpus row: 8B seq + 4B dur + 4B patient + 1B mask
@@ -43,6 +44,20 @@ def _working_set(nevents: np.ndarray, config: MiningConfig,
     e = max(-(-e // pad_multiple) * pad_multiple, 1)
     factor = 1.0 if config.backend == "kernel" else 0.5  # dense vs triangular
     return int(len(nevents) * e * e * chunking.BYTES_PER_PAIR * factor)
+
+
+def _fused_working_set(nevents: np.ndarray, config: MiningConfig,
+                       pad_multiple: int = 8) -> int:
+    """Screen-pass working set under ``screen='fused'``: one patient block
+    of dense pair slabs plus the [2^H] table — independent of P once the
+    cohort exceeds a block.  This is the planner's second, much cheaper
+    budget regime (the corpus is never materialized before the screen)."""
+    e = int(np.max(nevents, initial=1))
+    e = max(-(-e // pad_multiple) * pad_multiple, 1)
+    plan = roofline.mining_tile_plan(e, config.n_buckets_log2)
+    blk = min(plan.block_patients, len(nevents))
+    return int(blk * e * e * chunking.BYTES_PER_PAIR
+               + (4 << config.n_buckets_log2))
 
 
 def _corpus_bytes(nevents: np.ndarray) -> int:
@@ -69,7 +84,12 @@ def make_plan(config: MiningConfig, nevents=None,
     incremental session (``incremental=True``, no cohort known up front)."""
     nevents = (np.zeros(0, np.int64) if nevents is None
                else np.asarray(nevents, np.int64))
-    ws = _working_set(nevents, config) if len(nevents) else 0
+    fused = config.screen == "fused"
+    if len(nevents):
+        ws = (_fused_working_set(nevents, config) if fused
+              else _working_set(nevents, config))
+    else:
+        ws = 0
     corpus = _corpus_bytes(nevents) if len(nevents) else 0
     budget = config.budget_bytes
     n_chunks = (len(chunking.plan_chunks(nevents, budget))
@@ -79,7 +99,7 @@ def make_plan(config: MiningConfig, nevents=None,
                   disk_bytes=config.disk_bytes,
                   corpus_bytes=corpus, n_chunks=n_chunks,
                   n_shards=config.n_shards, placement=placement,
-                  incremental=incremental)
+                  incremental=incremental, corpus_free=fused)
 
     if config.engine is not None:
         return Plan(config.engine,
@@ -101,7 +121,9 @@ def make_plan(config: MiningConfig, nevents=None,
         return Plan("files", "flat corpus exceeds spill_bytes; chunks spill "
                     "to disk and screen via the merged count table", **common)
     if budget is None or ws <= budget:
-        return Plan("batch", "mining working set fits the byte budget",
-                    **common)
+        reason = ("corpus-free fused screen working set fits the byte "
+                  "budget" if fused
+                  else "mining working set fits the byte budget")
+        return Plan("batch", reason, **common)
     return Plan("chunked", "working set exceeds budget_bytes; mining "
                 f"adaptively in {n_chunks} patient chunks", **common)

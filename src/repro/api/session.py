@@ -100,8 +100,24 @@ class MiningSession:
             n_buckets_log2=c.n_buckets_log2, screen_mode=c.screen,
             threshold=c.threshold)
 
+    def _fit_fused(self, db: DBMart) -> SequenceFrame:
+        """screen='fused': corpus-free counting pass, survivors-only
+        materialization (chunking.mine_fused) — the only pair-allocating
+        path is one re-mine chunk at a time plus the survivors."""
+        c = self.config
+        out = chunking.mine_fused(
+            db, threshold=c.threshold,
+            budget_bytes=c.budget_bytes or (1 << 28), codec=c.codec,
+            backend=c.backend, n_buckets_log2=c.n_buckets_log2,
+            fuse_duration=c.fuse_duration, bucket_days=c.bucket_days)
+        return self._frame(out["seq"], out["dur"], out["patient"],
+                           counts=out["counts"], vocab=db.vocab,
+                           n_patients=db.n_patients)
+
     def _fit_batch(self, db: DBMart) -> SequenceFrame:
         c = self.config
+        if c.screen == "fused":
+            return self._fit_fused(db)
         mined = mining.mine(db.phenx, db.date, db.nevents, codec=c.codec,
                             fuse_duration=c.fuse_duration,
                             bucket_days=c.bucket_days, backend=c.backend)
@@ -114,6 +130,8 @@ class MiningSession:
 
     def _fit_chunked(self, db: DBMart) -> SequenceFrame:
         c = self.config
+        if c.screen == "fused":
+            return self._fit_fused(db)
         out = chunking.mine_chunked(
             db, budget_bytes=c.budget_bytes or (1 << 28), codec=c.codec,
             backend=c.backend, n_buckets_log2=c.n_buckets_log2,
@@ -125,6 +143,25 @@ class MiningSession:
 
     def _fit_files(self, db: DBMart) -> SequenceFrame:
         c = self.config
+        if c.screen == "fused":
+            # corpus-free screen first; only survivors ever hit the disk,
+            # keeping the spill-directory contract (chunk .npz + merged
+            # bucket_counts.npy) intact
+            out = chunking.mine_fused(
+                db, threshold=c.threshold,
+                budget_bytes=c.budget_bytes or (1 << 28), codec=c.codec,
+                backend=c.backend, n_buckets_log2=c.n_buckets_log2,
+                fuse_duration=c.fuse_duration, bucket_days=c.bucket_days)
+            if c.spill_dir:
+                os.makedirs(c.spill_dir, exist_ok=True)
+                np.save(os.path.join(c.spill_dir, "bucket_counts.npy"),
+                        out["counts"])
+                np.savez(os.path.join(c.spill_dir, "chunk_00000.npz"),
+                         seq=out["seq"], dur=out["dur"],
+                         patient=out["patient"])
+            return self._frame(out["seq"], out["dur"], out["patient"],
+                               counts=out["counts"], vocab=db.vocab,
+                               n_patients=db.n_patients)
         out_dir = c.spill_dir or tempfile.mkdtemp(prefix="tspm_spill_")
         try:
             chunking.mine_to_files(
@@ -335,5 +372,13 @@ class MiningSession:
             patient = lut[snap.patient].astype(np.int32)
         else:
             patient = snap.patient    # non-int keys: keep dense pids
-        return self._frame(snap.seq, snap.dur, patient, counts=snap.counts,
+        seq, dur = snap.seq, snap.dur
+        if self.config.screen == "fused":
+            # the sketch table already equals the batch bucket counts
+            # (property-tested); compact the snapshot to its hash-screen
+            # survivors so streaming frames match the fused batch frames
+            seq, dur, patient = sparsity.screen_survivors(
+                seq, dur, patient, np.asarray(snap.counts),
+                self.config.threshold, self.config.n_buckets_log2)
+        return self._frame(seq, dur, patient, counts=snap.counts,
                            vocab=vocab, n_patients=n_patients)

@@ -108,6 +108,45 @@ def mine_chunked(db: DBMart, budget_bytes: int = 1 << 28, threshold: int | None 
     return out
 
 
+def mine_fused(db: DBMart, threshold: int, budget_bytes: int = 1 << 28,
+               codec: str = "bit", backend: str = "jnp",
+               n_buckets_log2: int = 20, fuse_duration: bool = False,
+               bucket_days: int = 30) -> dict:
+    """Screen-then-materialize: corpus-free counting, survivors-only pairs.
+
+    Pass 1 builds the global [2^H] bucket table with the fused mine+screen
+    kernel (``kernels/tspm_fused``) — no [P, n, n] corpus exists during the
+    screen.  Pass 2 re-mines chunk-by-chunk under ``budget_bytes`` and
+    compacts each chunk straight to its hash-screen survivors, so the only
+    pair allocations are one chunk slab at a time plus the survivors
+    themselves.  Byte-identical to mine + hash screen (keeping is per-id,
+    so supports and canonical order are preserved).
+
+    Returns compacted numpy {seq, dur, patient} (every row real) plus the
+    global 'counts' table.
+    """
+    from repro.kernels.tspm_fused import ops as fused_ops
+
+    counts = np.asarray(fused_ops.fused_bucket_counts(
+        db.phenx, db.date, db.nevents, codec=codec,
+        fuse_duration=fuse_duration, bucket_days=bucket_days,
+        n_buckets_log2=n_buckets_log2, backend=backend))
+    chunks = plan_chunks(np.asarray(db.nevents), budget_bytes)
+    parts = []
+    for ch in chunks:
+        sub = db.slice_patients(ch.start, ch.stop, ch.max_events)
+        mined = mining.mine(sub.phenx, sub.date, sub.nevents, codec=codec,
+                            fuse_duration=fuse_duration,
+                            bucket_days=bucket_days, backend=backend)
+        seq, dur, pat, msk = mining.flatten(mined, patient_offset=ch.start)
+        parts.append(sparsity.screen_survivors(
+            seq, dur, pat, counts, threshold, n_buckets_log2, mask=msk))
+    cat = lambda k, dt: (np.concatenate([p[k] for p in parts]) if parts
+                         else np.zeros(0, dt))
+    return {"seq": cat(0, np.int64), "dur": cat(1, np.int32),
+            "patient": cat(2, np.int32), "counts": counts}
+
+
 def mine_to_files(db: DBMart, out_dir: str, budget_bytes: int = 1 << 28,
                   codec: str = "bit", backend: str = "jnp",
                   n_buckets_log2: int = 22, fuse_duration: bool = False,

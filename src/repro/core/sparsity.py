@@ -25,11 +25,16 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.encoding import SENTINEL
 
 # multiply-shift hash constant (odd; splitmix64's golden-gamma)
 _HASH_K = jnp.int64(-7046029254386353131)  # == 0x9E3779B97F4A7C15 mod 2^64
+# the same constant as an unsigned Python int, for host-side modular
+# arithmetic (kernels/tspm_fused derives its limb-decomposed per-field
+# hash constants from this; the two spellings must stay equal mod 2^64)
+HASH_MULT = 0x9E3779B97F4A7C15
 
 
 class Screened(NamedTuple):
@@ -170,3 +175,27 @@ def screen_hash_from_counts(seq, mask, counts, threshold, n_buckets_log2: int):
     """Apply a pre-merged global bucket-count table to a chunk."""
     keep = counts[hash_bucket(seq, n_buckets_log2)] >= threshold
     return keep & jnp.asarray(mask, bool)
+
+
+def screen_survivors(seq, dur, patient, counts, threshold,
+                     n_buckets_log2: int, mask=None):
+    """Host-compacted survivors of the hash screen (corpus-free path).
+
+    The materialization half of ``screen="fused"``: given the global
+    bucket-count table from the corpus-free counting pass, keep only the
+    rows whose bucket clears ``threshold`` and compact them to numpy
+    arrays.  Keeping is per-*id* (every row of a surviving id survives),
+    so supports, re-screens and the canonical lexsort order of the
+    compacted arrays are byte-identical to screening the materialized
+    corpus with the same table.
+    """
+    seq = jnp.asarray(seq, jnp.int64).reshape(-1)
+    if mask is None:
+        mask = seq != SENTINEL
+    else:
+        mask = jnp.asarray(mask, bool).reshape(-1)
+    keep = np.asarray(screen_hash_from_counts(
+        seq, mask, jnp.asarray(counts), threshold, n_buckets_log2))
+    return (np.asarray(seq)[keep],
+            np.asarray(jnp.asarray(dur, jnp.int32).reshape(-1))[keep],
+            np.asarray(jnp.asarray(patient, jnp.int32).reshape(-1))[keep])

@@ -1,0 +1,88 @@
+"""Dispatching wrapper: pad -> fused Pallas counting -> [2^H] bucket table.
+
+Mirrors tspm_pairgen/ops.py (padding recipe, interpret default) and
+seq_hist/ops.py (compare-and-reduce regime bound).  Tile sizes come from
+``analysis.roofline.mining_tile_plan`` — analytic VMEM fit by default,
+measured autotune rows when ``benchmarks/mining_fused.py`` hands them in.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import roofline
+from repro.kernels.tspm_fused import fused as _k
+from repro.kernels.tspm_fused import ref as _ref
+from repro.kernels.util import pad_to as _pad_to
+
+# compare-and-reduce histogram work is O(pairs * 2^H): past ~2^14 buckets
+# the recompute-per-bucket-tile factor loses to the jnp block fallback
+# (same bound as seq_hist's scatter-add crossover)
+KERNEL_MAX_LOG2 = 14
+
+
+def _kernel_block(phenx, nevents, codec, n_buckets_log2, plan, pb, tile, bt,
+                  interpret):
+    P, E = phenx.shape
+    tile = int(tile or plan.ti)
+    pb = int(pb or plan.pb)
+    bt_ = min(int(bt or plan.bt), 1 << n_buckets_log2)
+    while (1 << n_buckets_log2) % bt_:
+        bt_ //= 2
+    t = min(tile, max(128, 1 << int(np.ceil(np.log2(max(E, 1))))))
+    t = min(t, tile)
+    x = _pad_to(phenx, t, 1)
+    pbb = min(pb, P) if P % min(pb, P) == 0 else 1
+    x = _pad_to(x, pbb, 0)
+    nev = _pad_to(nevents, pbb, 0)     # padded patients: nevents == 0
+    return _k.fused_table(
+        x, nev, n_buckets_log2=n_buckets_log2, codec=codec, pb=pbb, ti=t,
+        tj=t, bt=bt_, chunk_i=min(4, t), interpret=interpret)
+
+
+def fused_bucket_counts(phenx, date, nevents, codec: str = "bit",
+                        fuse_duration: bool = False, bucket_days: int = 30,
+                        n_buckets_log2: int = 20, backend: str = "auto",
+                        block_patients: int | None = None,
+                        pb: int | None = None, tile: int | None = None,
+                        bt: int | None = None,
+                        interpret: bool | None = None):
+    """Corpus-free [2^H] bucket counts == local_bucket_counts(mine(...)).
+
+    backend: 'kernel' | 'jnp' | 'auto' ('auto' = kernel on TPU, jnp ref
+    elsewhere, as mining.mine).  The Pallas kernel covers unfused ids with
+    H <= KERNEL_MAX_LOG2; fused-duration ids (whose cross-row dedup does
+    not decompose over tiles) and larger tables take the blocked jnp
+    reference — still corpus-free at cohort level (peak is one
+    [block, E, E] slab, never [P, E, E]).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if backend == "auto":
+        backend = "kernel" if jax.default_backend() == "tpu" else "jnp"
+    phenx = jnp.asarray(phenx, jnp.int32)
+    date = jnp.asarray(date, jnp.int32)
+    nevents = jnp.asarray(nevents, jnp.int32).reshape(-1)
+    H = n_buckets_log2
+    P, E = phenx.shape if phenx.ndim == 2 else (0, 0)
+    if P == 0 or E == 0:
+        # zero-width-slab guard (mirrors tspm_delta/ops.py): no events,
+        # empty table
+        return jnp.zeros(1 << H, jnp.int32)
+    plan = roofline.mining_tile_plan(E, H)
+    blk = int(block_patients or plan.block_patients)
+    use_kernel = (backend == "kernel" and not fuse_duration
+                  and H <= KERNEL_MAX_LOG2)
+    counts = jnp.zeros(1 << H, jnp.int32)
+    for s in range(0, P, blk):
+        e = s + blk
+        if use_kernel:
+            part = _kernel_block(phenx[s:e], nevents[s:e], codec, H, plan,
+                                 pb, tile, bt, interpret)
+        else:
+            part = _ref.block_bucket_counts(
+                phenx[s:e], date[s:e], nevents[s:e], codec, fuse_duration,
+                bucket_days, H)
+        counts = counts + part
+    return counts

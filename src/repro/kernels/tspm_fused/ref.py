@@ -1,0 +1,48 @@
+"""jnp reference for fused mine+screen bucket counting (the kernel oracle).
+
+``block_bucket_counts`` is the semantic contract of ``kernels/tspm_fused``:
+mine a patient block to the dense pair layout, then fold it straight into
+the [2^H] hash-bucket table with first-contribution-per-patient dedup —
+``sparsity.local_bucket_counts`` applied to ``mining.mine_dense``.  The
+block never leaves the function, so the *cohort-level* peak is one dense
+block, not the [P, E, E] corpus: this is also the production fallback for
+the cases the Pallas kernel does not cover (fused-duration ids, whose
+cross-row dedup does not decompose over (i, j) tiles, and bucket tables
+past the compare-and-reduce regime).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import mining, sparsity
+
+
+def block_bucket_counts(phenx, date, nevents, codec: str = "bit",
+                        fuse_duration: bool = False, bucket_days: int = 30,
+                        n_buckets_log2: int = 20):
+    """[2^H] int32 distinct-patient bucket counts of one patient block."""
+    m = mining.mine_dense(phenx, date, nevents, codec, fuse_duration,
+                          bucket_days)
+    P = m.seq.shape[0]
+    return sparsity.local_bucket_counts(
+        m.seq.reshape(P, -1), m.mask.reshape(P, -1), n_buckets_log2)
+
+
+def fused_bucket_counts_ref(phenx, date, nevents, codec: str = "bit",
+                            fuse_duration: bool = False, bucket_days: int = 30,
+                            n_buckets_log2: int = 20,
+                            block_patients: int = 256):
+    """Whole-cohort oracle: block loop over :func:`block_bucket_counts`.
+
+    Bucket counts are additive over disjoint patient blocks (each distinct
+    (patient, id) contributes exactly once, to the same bucket, whichever
+    block its patient lands in), so this equals the single-shot table.
+    """
+    P = phenx.shape[0] if getattr(phenx, "ndim", 0) == 2 else 0
+    counts = jnp.zeros(1 << n_buckets_log2, jnp.int32)
+    for s in range(0, P, block_patients):
+        e = s + block_patients
+        counts = counts + block_bucket_counts(
+            phenx[s:e], date[s:e], nevents[s:e], codec, fuse_duration,
+            bucket_days, n_buckets_log2)
+    return counts

@@ -240,3 +240,13 @@ class OnlineSupportSketch:
         """Hash-screen keep mask over any corpus using the live table."""
         return sparsity.screen_hash_from_counts(
             seq, mask, self.counts, threshold, self.n_buckets_log2)
+
+    def survivors(self, seq, dur, patient, threshold: int, mask=None):
+        """Compact a corpus to its hash-screen survivors using the live
+        table — the streaming half of ``screen='fused'``: because this
+        table exactly equals the batch ``local_bucket_counts``, the
+        compacted arrays are byte-identical to the corpus-free batch
+        path's survivors on the same corpus."""
+        return sparsity.screen_survivors(
+            seq, dur, patient, np.asarray(self.counts), threshold,
+            self.n_buckets_log2, mask=mask)

@@ -63,6 +63,87 @@ def test_conformance_all_engines(tmp_path, screen):
         assert pat.tobytes() == bpat.tobytes(), e
 
 
+def test_conformance_fused_screen(tmp_path):
+    """screen='fused' (corpus-free counting + survivors-only
+    materialization) is byte-identical to the batch mine+screen oracle
+    across every engine.  Fused frames hold only survivors, so the
+    comparison is the screened collect (seq/dur/patient/support bytes +
+    decoded strings), not the raw corpus."""
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=32, avg_events=14, seed=21)
+    db = dbmart.from_rows(pats, dates, phx)
+    frames = {"oracle": fit_engine("batch", db, threshold=3, screen="hash")}
+    frames.update({e: fit_engine(e, db, tmp_path, threshold=3,
+                                 screen="fused")
+                   for e in ENGINES})
+    assert_frames_identical(frames, decode=True)
+    for e in ENGINES:
+        assert frames[e].screen_mode == "fused"
+        # survivors-only: the fused frame's corpus is exactly the oracle's
+        # kept rows (nothing sparse was ever materialized)
+        assert len(frames[e]) == frames["oracle"].screen().n_kept
+
+
+def test_conformance_fused_screen_threshold_edge(tmp_path):
+    """The support == threshold edge: fit at the exact max support and one
+    past it; fused and materializing paths agree at both."""
+    rng = np.random.default_rng(207)
+    db = random_dbmart(rng, n_patients=10, max_events=14, n_codes=5)
+    probe = fit_engine("batch", db, threshold=1, screen="hash")
+    sup = probe.collect().support
+    assert len(sup), "degenerate cohort"
+    thr = int(sup.max())              # some id sits exactly at the edge
+    for t in (thr, thr + 1):
+        frames = {"oracle": fit_engine("batch", db, threshold=t,
+                                       screen="hash")}
+        frames.update({e: fit_engine(e, db, tmp_path, threshold=t,
+                                     screen="fused")
+                       for e in ENGINES})
+        assert_frames_identical(frames)
+    # above every support, the fused fit materializes nothing at all
+    empty = fit_engine("batch", db, threshold=int(sup.max()) + 1,
+                       screen="fused")
+    assert len(empty) == 0
+
+
+def test_fused_screen_streaming_sketch_path():
+    """Incremental submit/tick under screen='fused': the live sketch table
+    (stream/counts) drives survivor compaction, matching the batch fused
+    fit — and OnlineSupportSketch.survivors agrees with the frame."""
+    rng = np.random.default_rng(77)
+    db = random_dbmart(rng, n_patients=8, max_events=14)
+    batch = MiningSession(MiningConfig(threshold=2, n_buckets_log2=H,
+                                       screen="fused")).fit(db)
+
+    sess = MiningSession(MiningConfig(threshold=2, n_buckets_log2=H,
+                                      screen="fused", tick_patients=2))
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        cut = n // 2
+        if cut:
+            sess.submit(p, db.date[p, :cut], db.phenx[p, :cut])
+        if n - cut:
+            sess.submit(p, db.date[p, cut:n], db.phenx[p, cut:n])
+    sess.tick()                          # one wave, then drain
+    final = sess.run()
+
+    br, fr = batch.screen().collect(), final.screen().collect()
+    for field, a, b in zip(br._fields, br, fr):
+        assert a.dtype == b.dtype and a.tobytes() == b.tobytes(), field
+
+    # the sketch's survivors() is the same compaction the frame went
+    # through: applying it to the raw snapshot reproduces the frame corpus
+    # (frames canonicalize row order, so compare in the same lexsort)
+    snap = sess.service.snapshot()
+    seq, dur, pat = sess.service.sketch.survivors(
+        snap.seq, snap.dur, snap.patient, 2)
+    order = np.lexsort((dur, pat, seq))
+    fseq, fdur, fpat, _ = final.arrays()
+    assert seq[order].tobytes() == np.asarray(fseq).tobytes()
+    assert dur[order].tobytes() == np.asarray(fdur).tobytes()
+    assert pat[order].tobytes() == np.asarray(fpat).tobytes()
+
+
 def test_conformance_fused_duration(tmp_path):
     pats, dates, phx, _ = synthea.generate_cohort(
         n_patients=24, avg_events=12, seed=3)
@@ -150,6 +231,30 @@ def test_config_validation():
         MiningConfig(engine="gpu")
     with pytest.raises(ValueError):
         MiningConfig(n_shards=0)
+    # fused screening compacts survivors during fit: threshold is required
+    with pytest.raises(ValueError):
+        MiningConfig(screen="fused")
+    assert MiningConfig(screen="fused", threshold=3).screen == "fused"
+
+
+def test_fused_plan_is_corpus_free():
+    """The planner's second budget regime: under screen='fused' the
+    working set is one patient block + the table, not the whole corpus —
+    so a budget that forces chunking on the materializing path stays
+    'batch' on the fused one, and the plan says why."""
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=1024, avg_events=16, seed=9)
+    db = dbmart.from_rows(pats, dates, phx)
+    budget = 1 << 24
+    dense = MiningSession(MiningConfig(budget_bytes=budget,
+                                       screen="hash")).plan(db)
+    fused = MiningSession(MiningConfig(budget_bytes=budget, threshold=3,
+                                       screen="fused",
+                                       n_buckets_log2=H)).plan(db)
+    assert dense.engine == "chunked" and not dense.corpus_free
+    assert fused.engine == "batch" and fused.corpus_free
+    assert fused.working_set_bytes < dense.working_set_bytes
+    assert "corpus-free" in str(fused)
 
 
 # --- frame semantics vs hand-wired core flows --------------------------------

@@ -139,6 +139,21 @@ def test_observability_gate_present(workflow, suites):
     assert "0.03" in runs
 
 
+def test_fused_screen_gate_present(workflow, suites):
+    """The corpus-free screen must stay byte-invisible: tier-1 carries a
+    gate fitting a live screen="fused" session against the materializing
+    path and re-validating the checked-in BENCH_mining_fused.json
+    (exactness + peak-bytes ratio under the BYTES_PER_PAIR cost model),
+    and the mining_fused suite is registered so bench-smoke regenerates
+    the artifact on every PR."""
+    assert "mining_fused" in suites
+    runs = " ".join(s.get("run", "")
+                    for s in workflow["jobs"]["tier1"]["steps"])
+    assert "BENCH_mining_fused.json" in runs
+    assert "mining_fused" in runs
+    assert 'screen="fused"' in runs
+
+
 def test_nightly_checkpoint_resume_drill(workflow, suites):
     """The nightly must kill a checkpointing replay mid-run and resume it
     across a real process boundary, diffing query results against an
