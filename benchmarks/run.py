@@ -47,6 +47,11 @@
                      restored bytes asserted identical
                      (``--suite storage_tiering`` writes
                      BENCH_storage_tiering.json)
+  serving_latency -> batched QueryServer vs lock-serialized per-query
+                     frame evaluation at >= 32 concurrent clients:
+                     masks asserted byte-identical, p99 speedup
+                     asserted >= 2x (``--suite serving_latency`` writes
+                     BENCH_serving_latency.json)
 
 An unknown ``--suite`` prints the available suites instead of failing
 opaquely.  Prints ``name,us_per_call,derived`` CSV rows.
@@ -186,6 +191,13 @@ def mining_fused_bench(small=True, out_path=None):
     mining_fused.main(small=small, json_path=out_path, backend="jnp")
 
 
+def serving_latency_bench(small=True, out_path=None):
+    from benchmarks import serving_latency
+
+    out_path = out_path or "BENCH_serving_latency.json"
+    serving_latency.main(small=small, json_path=out_path, backend="jnp")
+
+
 def storage_tiering_bench(small=True, out_path=None):
     from benchmarks import storage_tiering
 
@@ -209,6 +221,9 @@ SUITES = {
                      mining_fused_bench),
     "storage_tiering": ("compressed disk tier + checkpoint/resume "
                         "(>= 3x ratio asserted)", storage_tiering_bench),
+    "serving_latency": ("batched query serving vs per-query eval "
+                        "(>= 2x p99 at 32 clients asserted)",
+                        serving_latency_bench),
 }
 
 

@@ -1,0 +1,195 @@
+"""Serving latency under concurrent load: batched waves vs per-query eval.
+
+The read-path claim (ISSUE 9 / ROADMAP item 4): at >= 32 concurrent
+clients, the batched QueryServer improves tail latency by >= 2x over
+naive sequential evaluation.  Both sides serve the *same* zipf-ish query
+stream (repeated plans — the serving workload shape) from the same number
+of client threads, and latency is measured submit-to-result per query, so
+queue wait counts on both sides:
+
+  * **sequential** — each query builds a fresh ``SequenceFrame`` chain on
+    the snapshot and forces it under a server-side lock: one evaluation
+    per query, 2-4 jax dispatches each, no result reuse — the "every
+    query re-runs mask composition" status quo;
+  * **batched** — the same plans through ``session.serve()``: canonical
+    plan dedup, LRU result cache, and ONE jitted vmapped kernel dispatch
+    per wave of up to ``batch_size`` distinct programs.
+
+Exactness is asserted before speed: every batched keep mask must be
+byte-identical to the frame-path mask for its plan.  ``main`` writes
+BENCH_serving_latency.json with p50/p99 for both paths and asserts the
+p99 speedup ceiling (``min_p99_speedup``) that CI re-validates.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.api import MiningConfig, MiningSession
+from repro.data import dbmart, synthea
+from repro.serving.tspm import plan
+
+
+def _percentile(lat_s: list, q: float) -> float:
+    lat = np.sort(np.asarray(lat_s))
+    return float(lat[int(q * (len(lat) - 1))])
+
+
+def _make_pool(codes: np.ndarray, rng: np.random.Generator, n_distinct: int):
+    """A pool of distinct plans spanning the op vocabulary."""
+    pool = []
+    while len(pool) < n_distinct:
+        kind = len(pool) % 4
+        c = int(rng.choice(codes))
+        if kind == 0:
+            pool.append(plan().screen().starts_with(c))
+        elif kind == 1:
+            pool.append(plan().screen().ends_with(c))
+        elif kind == 2:
+            pool.append(plan().screen().min_duration(
+                int(rng.integers(1, 120))))
+        else:
+            pool.append(plan().screen().starts_with(c).top_k(
+                int(rng.integers(1, 16))))
+    return pool
+
+
+def _drive(n_clients: int, work):
+    """Run ``work(plan) -> latency_s`` from ``n_clients`` threads over a
+    strided split of the stream; returns per-query latencies.  Clients
+    rendezvous on a barrier before the clock starts, so thread spawn cost
+    never pollutes the latency distribution."""
+    lats: list[float] = []
+    lock = threading.Lock()
+    barrier = threading.Barrier(n_clients + 1)
+
+    def client(chunk):
+        barrier.wait()
+        out = [work(p) for p in chunk]
+        with lock:
+            lats.extend(out)
+
+    threads = [threading.Thread(target=client, args=(work.stream[i::n_clients],))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    return lats, time.perf_counter() - t0
+
+
+def serving_latency(n_patients=128, avg_events=24, threshold=3,
+                    n_queries=2048, n_clients=32, batch_size=32,
+                    n_distinct=24, seed=7, backend="jnp"):
+    assert n_clients >= 32, "the acceptance claim is at >= 32 clients"
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=n_patients, avg_events=avg_events, seed=seed)
+    db = dbmart.from_rows(pats, dates, phx)
+    session = MiningSession(MiningConfig(
+        threshold=threshold, tick_patients=8, backend=backend))
+    server = session.serve(batch_size=batch_size)
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        if n:
+            session.submit(p, db.date[p, :n], db.phenx[p, :n])
+    session.run()
+    view = server.view()
+    base = view.frame
+
+    rng = np.random.default_rng(seed)
+    codes = np.unique(db.phenx[db.phenx >= 0])
+    pool = _make_pool(codes, rng, n_distinct)
+    # zipf-ish repeats: the serving workload shape (hot cohort queries)
+    weights = 1.0 / np.arange(1, len(pool) + 1)
+    stream = [pool[i] for i in rng.choice(
+        len(pool), size=n_queries, p=weights / weights.sum())]
+
+    # oracle masks per distinct plan: the conformance bar and the warmup
+    # for everything shared (corpus lexsort, support, counts, jit caches)
+    oracle = {p.ops: p.resolve(threshold).apply(base).keep_mask()
+              for p in pool}
+    warm = plan().screen().min_duration(100_000)       # not in the pool
+    assert server.query(warm).n_kept == 0              # warms the kernel
+
+    # --- sequential: one fresh frame chain per query, lock-serialized ------
+    eval_lock = threading.Lock()
+
+    def seq_work(p):
+        t0 = time.perf_counter()
+        with eval_lock:
+            p.resolve(threshold).apply(base).keep_mask()
+        return time.perf_counter() - t0
+
+    seq_work.stream = stream
+    seq_lats, seq_wall = _drive(n_clients, seq_work)
+
+    # --- batched: the QueryServer wave loop --------------------------------
+    server.start()
+
+    def bat_work(p):
+        t0 = time.perf_counter()
+        r = server.submit(p).result(timeout=120)
+        dt = time.perf_counter() - t0
+        bat_work.masks.append((p, r.keep))   # list.append is thread-safe
+        return dt
+
+    bat_work.masks = []
+    bat_work.stream = stream
+    bat_lats, bat_wall = _drive(n_clients, bat_work)
+    server.stop()
+
+    for p, keep in bat_work.masks:
+        assert keep.tobytes() == oracle[p.ops].tobytes(), \
+            f"batched mask diverged for {p}"
+
+    st = server.stats()
+    seq_p50, seq_p99 = _percentile(seq_lats, .50), _percentile(seq_lats, .99)
+    bat_p50, bat_p99 = _percentile(bat_lats, .50), _percentile(bat_lats, .99)
+    return {
+        "patients": n_patients, "corpus_rows": view.n_rows,
+        "n_queries": n_queries, "n_clients": n_clients,
+        "n_distinct_plans": n_distinct, "batch_size": batch_size,
+        "threshold": threshold, "backend": backend, "seed": seed,
+        "exact": True,
+        "sequential_p50_ms": seq_p50 * 1e3, "sequential_p99_ms": seq_p99 * 1e3,
+        "sequential_wall_s": seq_wall,
+        "batched_p50_ms": bat_p50 * 1e3, "batched_p99_ms": bat_p99 * 1e3,
+        "batched_wall_s": bat_wall,
+        "p50_speedup": seq_p50 / max(bat_p50, 1e-9),
+        "p99_speedup": seq_p99 / max(bat_p99, 1e-9),
+        "min_p99_speedup": 2.0,
+        "waves": st["waves"], "cache_hit_ratio": st["cache_hit_ratio"],
+        "views_published": st["views_published"],
+    }
+
+
+def main(small=True, json_path=None, backend="jnp"):
+    kw = dict() if small else dict(n_patients=256, avg_events=24,
+                                   n_queries=4096, n_clients=64)
+    r = serving_latency(backend=backend, **kw)
+    print("name,us_per_call,derived")
+    print(f"serving_latency/sequential_p99,{r['sequential_p99_ms']*1e3:.0f},"
+          f"p50={r['sequential_p50_ms']:.2f}ms (lock-serialized frame eval)")
+    print(f"serving_latency/batched_p99,{r['batched_p99_ms']*1e3:.0f},"
+          f"p50={r['batched_p50_ms']:.2f}ms over {r['waves']} waves; "
+          f"hit_ratio={r['cache_hit_ratio']:.2f}")
+    print(f"serving_latency/p99_speedup,,"
+          f"{r['p99_speedup']:.2f}x at {r['n_clients']} clients "
+          f"(>= {r['min_p99_speedup']:.0f}x required); exact=True")
+    assert r["p99_speedup"] >= r["min_p99_speedup"], \
+        (f"batched p99 speedup {r['p99_speedup']:.2f}x below the "
+         f"{r['min_p99_speedup']:.0f}x acceptance bar")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"serving_latency/artifact,,{json_path}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

@@ -60,6 +60,27 @@ def main():
     print(f"\nresumed stream: kept {resumed.frame().screen().n_kept:,} "
           f"at support>=5 (continuation is byte-identical)")
 
+    # --- query serving -----------------------------------------------------
+    # The read path: session.serve() publishes a snapshot-isolated replica
+    # at every tick boundary and answers plan chains in batched waves —
+    # byte-identical to chaining the same ops on the frame, but one kernel
+    # dispatch per wave of distinct plans plus an LRU keyed on canonical
+    # plans, so repeated/permuted queries are cache hits.
+    from repro.serving.tspm import plan
+
+    server = resumed.serve(batch_size=16)
+    queries = [plan().screen().min_duration(30),
+               plan().min_duration(30).screen(),    # same canonical plan
+               plan().screen().top_k(8)]
+    with server:                                    # background wave loop
+        results = [server.submit(q).result(timeout=60) for q in queries]
+    for q, r in zip(queries, results):
+        print(f"  serve {str(q):40s} -> {r.n_kept:,} rows "
+              f"@ tick {r.view.tick}")
+    st = server.stats()
+    print(f"served {st['queries']} queries in {st['waves']} wave(s), "
+          f"cache hit ratio {st['cache_hit_ratio']:.2f}")
+
 
 if __name__ == "__main__":
     main()

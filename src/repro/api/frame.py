@@ -26,6 +26,7 @@ reads phenX codes, not duration bits.
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable, NamedTuple
 
 import jax.numpy as jnp
@@ -64,7 +65,12 @@ class _Corpus:
 
     __slots__ = ("n_buckets_log2", "_raw", "_n_rows",
                  "_seq", "_dur", "_patient",
-                 "_counts", "_support", "_pair_first")
+                 "_counts", "_support", "_pair_first",
+                 "_prefix_cache", "_lock")
+
+    #: forced-prefix masks kept per corpus before the cache resets — masks
+    #: are [N] bools, so even the cap costs well under the corpus itself
+    PREFIX_CACHE_MAX = 256
 
     def __init__(self, seq, dur, patient, mask, counts, n_buckets_log2):
         seq = np.asarray(seq, np.int64).reshape(-1)
@@ -79,17 +85,32 @@ class _Corpus:
         self._counts = None if counts is None else np.asarray(counts, np.int32)
         self._support = None
         self._pair_first = None
+        # keep masks memoized per op-chain prefix: chained frames share
+        # their parents' op tuples structurally, so forcing a long chain
+        # reuses every already-forced prefix instead of re-running it
+        self._prefix_cache: dict[tuple, np.ndarray] = {}
+        # serving replicas force one corpus from several query threads;
+        # double-checked in _canonicalize so the hot path stays lock-free
+        self._lock = threading.Lock()
 
-    def _canonicalize(self) -> None:
-        if self._seq is not None:
-            return
+    def _canonicalize_locked(self) -> None:
         seq, dur, patient, mask = self._raw
         if mask is not None:
             seq, dur, patient = seq[mask], dur[mask], patient[mask]
         order = np.lexsort((dur, patient, seq))
-        self._seq, self._dur, self._patient = \
-            seq[order], dur[order], patient[order]
+        # _seq is the published-flag the lock-free fast path checks, so it
+        # is assigned last; _raw stays readable for any reader already past
+        # the check (it only flips to None after everything is in place)
+        self._dur, self._patient = dur[order], patient[order]
+        self._seq = seq[order]
         self._raw = None
+
+    def _canonicalize(self) -> None:
+        if self._seq is not None:
+            return
+        with self._lock:
+            if self._seq is None:
+                self._canonicalize_locked()
 
     @property
     def seq(self) -> np.ndarray:
@@ -108,10 +129,14 @@ class _Corpus:
 
     def __len__(self) -> int:
         if self._n_rows is None:
+            # capture _raw before checking _seq: a concurrent canonicalize
+            # flips _seq first and _raw last, so a stale local _raw is
+            # still valid (the arrays themselves never mutate)
+            raw = self._raw
             if self._seq is not None:
                 self._n_rows = len(self._seq)
             else:
-                self._n_rows = int(self._raw[3].sum())
+                self._n_rows = int(raw[3].sum())
         return self._n_rows
 
     def pair_first(self) -> np.ndarray:
@@ -207,11 +232,30 @@ class SequenceFrame:
             _corpus=self._corpus, _ops=self._ops + (op,))
 
     def keep_mask(self) -> np.ndarray:
-        """Force the lazily-composed predicate chain; cached per frame."""
+        """Force the lazily-composed predicate chain; cached per frame,
+        and memoized per op-chain *prefix* on the shared corpus: chained
+        frames extend their parent's ``_ops`` tuple structurally, so
+        ``f.screen()``, ``f.screen().starts_with(x)`` and
+        ``f.screen().starts_with(x).top_k(k)`` force each op exactly once
+        between them, whichever is evaluated first.  Masks in the cache
+        are never mutated (every op composes with ``&`` into a new
+        array), so sharing them across frames is safe."""
         if self._keep_cache is None:
-            keep = np.ones(len(self._corpus), bool)
-            for _, fn in self._ops:
-                keep = fn(self, keep)
+            cache = self._corpus._prefix_cache
+            n = len(self._ops)
+            run_from, keep = 0, None
+            for i in range(n, 0, -1):       # longest already-forced prefix
+                keep = cache.get(self._ops[:i])
+                if keep is not None:
+                    run_from = i
+                    break
+            if keep is None:
+                keep = np.ones(len(self._corpus), bool)
+            for j in range(run_from, n):
+                keep = self._ops[j][1](self, keep)
+                if len(cache) >= self._corpus.PREFIX_CACHE_MAX:
+                    cache.clear()
+                cache[self._ops[:j + 1]] = keep
             self._keep_cache = keep
         return self._keep_cache
 

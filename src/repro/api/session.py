@@ -227,6 +227,24 @@ class MiningSession:
                                "submit() deltas first")
         return self._snap_frame(self.service, vocab=self.vocab)
 
+    # --- serving ------------------------------------------------------------
+    def serve(self, **kw):
+        """Stand up a :class:`~repro.serving.tspm.server.QueryServer` over
+        this session — the read path.
+
+        Live streaming sessions get a replica that re-publishes at every
+        tick boundary (queries never block ``submit``/``tick`` and never
+        see a half-applied tick); batch-fit sessions serve a static view
+        of ``last_frame``.  Keywords forward to ``QueryServer``:
+        ``batch_size``, ``cache_entries``, ``feature_ids`` (streams the
+        per-patient feature matrix), ``auto_publish``.  Calling ``serve``
+        on a fresh incremental session stands the service up first so the
+        server can subscribe to tick boundaries."""
+        from repro.serving.tspm import QueryServer
+        if self.service is None and self.last_frame is None:
+            self._ensure_service()
+        return QueryServer(self, **kw)
+
     def _ensure_service(self):
         if self.service is None:
             if self.last_frame is not None:

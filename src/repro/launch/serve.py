@@ -1,32 +1,30 @@
-"""Serving launcher: batched generation over the wave scheduler.
+"""Serving launcher: LM generation or tSPM+ query serving.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tspm-mlho --reduced
+  PYTHONPATH=src python -m repro.launch.serve --workload queries \\
+      --patients 64 --clients 32 --queries 128
+
+``--workload lm`` (default) runs batched generation over the LM wave
+scheduler; ``--workload queries`` mines a synthetic cohort through a live
+streaming session, stands up ``session.serve()``, and drives concurrent
+clients through the batched query path, printing wave/cache stats and the
+per-query latency spread.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.models import model as model_lib
-from repro.serving.engine import Request, ServeEngine
 
+def main_lm(args):
+    import jax
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tspm-mlho")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    from repro.serving.engine import Request, ServeEngine
 
     cfg = get_config(args.arch, reduced=args.reduced)
     mdl = model_lib.build(cfg)
@@ -51,6 +49,91 @@ def main(argv=None):
     for rid in sorted(results)[:4]:
         print(f"  req {rid}: {results[rid][:12].tolist()} ...")
     return results
+
+
+def main_queries(args):
+    from repro.api import MiningConfig, MiningSession
+    from repro.data import dbmart, synthea
+    from repro.serving.tspm import plan
+
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=args.patients, avg_events=16, seed=args.seed)
+    db = dbmart.from_rows(pats, dates, phx)
+    session = MiningSession(MiningConfig(threshold=args.threshold,
+                                         tick_patients=8))
+    server = session.serve(batch_size=args.batch)
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        if n:
+            session.submit(p, db.date[p, :n], db.phenx[p, :n])
+    session.run()
+    view = server.view()
+    print(f"serving {view.n_rows:,} mined rows at tick {view.tick} "
+          f"(batch={args.batch}, clients={args.clients})")
+
+    rng = np.random.default_rng(args.seed)
+    codes = np.unique(db.phenx[db.phenx >= 0]) if db.phenx.size else [0]
+    plans = [plan().screen().starts_with(int(rng.choice(codes)))
+             for _ in range(args.queries)]
+
+    lats: list[float] = []
+    lock = threading.Lock()
+    server.start()
+
+    def client(chunk):
+        for p in chunk:
+            t0 = time.perf_counter()
+            server.submit(p).result(timeout=60)
+            dt = time.perf_counter() - t0
+            with lock:
+                lats.append(dt)
+
+    threads = [threading.Thread(
+        target=client, args=(plans[i::args.clients],))
+        for i in range(args.clients)]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.time() - t0
+    server.stop()
+
+    lat = np.sort(np.asarray(lats))
+    p50 = float(lat[int(0.50 * (len(lat) - 1))]) * 1e3
+    p99 = float(lat[int(0.99 * (len(lat) - 1))]) * 1e3
+    st = server.stats()
+    print(f"served {st['queries']} queries in {wall:.2f}s "
+          f"({st['queries']/wall:.0f} q/s) over {st['waves']} waves")
+    print(f"  latency p50={p50:.2f}ms p99={p99:.2f}ms  "
+          f"cache hit ratio={st['cache_hit_ratio']:.2f}")
+    return st
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "queries"), default="lm")
+    # lm workload
+    ap.add_argument("--arch", default="tspm-mlho")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    # queries workload
+    ap.add_argument("--patients", type=int, default=64)
+    ap.add_argument("--threshold", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--queries", type=int, default=128)
+    args = ap.parse_args(argv)
+    if args.workload == "queries":
+        if args.batch == 4:     # lm default is too small for query waves
+            args.batch = 32
+        return main_queries(args)
+    return main_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,197 @@
+"""Snapshot-isolated read replicas of mining state.
+
+A :class:`ReadReplica` sits between a :class:`~repro.api.session.MiningSession`
+and the query path.  At every tick boundary (the service's ``subscribe_tick``
+hook) it *publishes* a fresh :class:`ReplicaView` — an immutable bundle of
+the snapshot frame, its ``snapshot_version``, its tick count, and the
+feature-store presence matrix folded at the same boundary — and swaps it in
+as the front view with one reference assignment.  Double buffering falls
+out of that discipline: the next view is assembled off to the side while
+readers keep using the current one, so
+
+  * queries never block ``submit``/``tick`` (they only ever *read* the
+    front reference and the immutable arrays behind it), and
+  * queries never observe a half-applied tick (the hook runs after
+    ``tick_finish`` has fully appended the wave, and ``snapshot()`` gathers
+    into fresh arrays that later ticks never touch).
+
+A view also lazily materializes the padded *evaluation columns* the batched
+wave kernel consumes — per-row start/end phenX, duration, and the screen
+statistic (exact support or hash-bucket count, matching the frame's screen
+mode) — padded to a power-of-two row count so heterogeneous snapshots reuse
+compiled kernel shapes, the same geometric-shape discipline the streaming
+store uses to bound retraces.
+"""
+from __future__ import annotations
+
+import threading
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core import queries, sparsity
+
+
+def _pow2(n: int, floor: int = 1024) -> int:
+    """Smallest power of two >= n (>= floor) — quantizes kernel shapes."""
+    out = floor
+    while out < n:
+        out *= 2
+    return out
+
+
+class EvalColumns(NamedTuple):
+    """Padded per-row predicate inputs for the batched kernel."""
+
+    start: np.ndarray   # [Npad] int32 start phenX (fuse-aware)
+    end: np.ndarray     # [Npad] int32 end phenX
+    dur: np.ndarray     # [Npad] int32 duration
+    screen: np.ndarray  # [Npad] int32 support or bucket count (per mode)
+    valid: np.ndarray   # [Npad] bool, False on padding rows
+    n_rows: int         # real (unpadded) row count
+
+
+class ReplicaView:
+    """One published, immutable snapshot of mining state.
+
+    ``frame`` is a plain :class:`SequenceFrame` over the snapshot corpus —
+    the conformance oracle *and* the host evaluator for barrier ops;
+    ``version``/``tick`` identify the publication (the result-cache key and
+    the staleness basis); ``feature_x`` is the feature store's presence
+    matrix as of this tick (point-in-time consistent with the corpus).
+    """
+
+    __slots__ = ("frame", "version", "tick", "feature_x", "_cols", "_lock",
+                 "pred_cache")
+
+    def __init__(self, frame, version: int, tick: int, feature_x=None):
+        self.frame = frame
+        self.version = version
+        self.tick = tick
+        self.feature_x = feature_x
+        self._cols: EvalColumns | None = None
+        self._lock = threading.Lock()
+        # (kind, arg) -> [Npad] bool predicate row, filled by the server's
+        # wave kernel.  Lock-free: rows are deterministic functions of the
+        # immutable columns, so a racing double-compute stores equal bytes
+        self.pred_cache: dict[tuple, np.ndarray] = {}
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.frame._corpus)
+
+    def columns(self) -> EvalColumns:
+        """The padded evaluation columns, built once per view (thread-safe:
+        concurrent query waves double-check under the view lock)."""
+        if self._cols is None:
+            with self._lock:
+                if self._cols is None:
+                    self._cols = self._build_columns()
+        return self._cols
+
+    def _build_columns(self) -> EvalColumns:
+        fr = self.frame
+        c = fr._corpus
+        n = len(c)
+        npad = _pow2(max(n, 1))
+        s, e = queries.unpack_seq(c.seq, fr.codec, fused=fr.fuse_duration)
+        if fr.screen_mode in ("hash", "fused"):
+            # same statistic the frame's screen op reads: the shared
+            # bucket-count table, gathered per row
+            h = np.asarray(sparsity.hash_bucket(c.seq, c.n_buckets_log2))
+            scr = np.asarray(c.counts())[h].astype(np.int32)
+        else:
+            scr = c.support()
+
+        def pad(a, dtype):
+            out = np.zeros(npad, dtype)
+            out[:n] = np.asarray(a, dtype)
+            return out
+
+        valid = np.zeros(npad, bool)
+        valid[:n] = True
+        return EvalColumns(pad(s, np.int32), pad(e, np.int32),
+                           pad(c.dur, np.int32), pad(scr, np.int32),
+                           valid, n)
+
+
+class ReadReplica:
+    """Double-buffered front/back publication of session state.
+
+    Writers (the ingest thread's tick hook, or an explicit ``publish()``)
+    assemble the next view under ``_pub_lock`` — the back buffer — then
+    install it as ``_front`` with a single reference store.  Readers call
+    :meth:`view` with no lock at all.
+    """
+
+    def __init__(self, session, feature_store=None):
+        self.session = session
+        self.feature_store = feature_store
+        self._front: ReplicaView | None = None
+        self._pub_lock = threading.Lock()
+        self.published = 0   # publication count (plain int; obs-agnostic)
+
+    def view(self) -> ReplicaView:
+        """The current front view (publishing one first if none exists)."""
+        v = self._front
+        if v is None:
+            v = self.publish()
+        return v
+
+    def publish(self) -> ReplicaView:
+        """Assemble and atomically install a fresh view of the session's
+        current state.  Cheap at publish time: the frame's canonical
+        lexsort and the kernel columns are lazy, paid by the first query
+        against the view — off the ingest thread."""
+        with self._pub_lock:
+            svc = self.session.service
+            frame = self.session.frame()
+            version = svc.snapshot_version if svc is not None else 0
+            tick = svc.n_ticks if svc is not None else 0
+            fx = (self.feature_store.fold()
+                  if self.feature_store is not None else None)
+            view = ReplicaView(frame, version, tick, feature_x=fx)
+            self.published += 1
+            self._front = view
+            return view
+
+    def staleness_ticks(self) -> int:
+        """Ticks the front view lags the live service (0 for batch/fresh)."""
+        svc = self.session.service
+        v = self._front
+        if svc is None or v is None:
+            return 0
+        return max(0, svc.n_ticks - v.tick)
+
+
+def uncompacted_rows(session) -> tuple[np.ndarray, np.ndarray]:
+    """(seq, patient-key) rows for feature-store bootstrap.
+
+    Live services hand back the *uncompacted* snapshot with pids translated
+    to original integer keys — bootstrapping from a fused-compacted frame
+    would silently drop rows of ids below today's threshold that later
+    ticks push over it.  Batch sessions return the fitted frame's corpus
+    (exact even when fused: a batch fit's counts are frozen, so its
+    survivor set can never grow).  Non-integer patient keys are rejected —
+    the presence matrix is indexed by key.
+    """
+    svc = session.service
+    if svc is None:
+        c = session.frame()._corpus
+        return c.seq, c.patient.astype(np.int64)
+    from repro.stream.shard import ShardedStreamService
+    if isinstance(svc, ShardedStreamService):
+        p2k = svc.pid_to_key()
+    else:
+        p2k = {pid: k for k, pid in svc.store.pids.items()}
+    if not all(isinstance(k, (int, np.integer)) for k in p2k.values()):
+        raise TypeError("the streaming feature store needs integer patient "
+                        "keys (the presence matrix is indexed by key); "
+                        "serve without feature_ids for keyed cohorts")
+    snap = svc.snapshot()
+    if not p2k:
+        return snap.seq, np.asarray(snap.patient, np.int64)
+    lut = np.full(max(p2k) + 1, -1, np.int64)
+    for pid, key in p2k.items():
+        lut[pid] = key
+    return snap.seq, lut[np.asarray(snap.patient)]

@@ -104,6 +104,8 @@ class PendingTick:
                 # shards overlap inside it (sum != aggregate busy time)
     t_disp: float = 0.0           # dispatch-end time (tick_begin return)
     span_device: object = None    # open obs device span (dispatch->ready)
+    keys: list = None             # wave patient keys, aligned with pids —
+                                  # delta subscribers need keys, not pids
 
 
 @dataclasses.dataclass
@@ -190,8 +192,15 @@ class StreamService(SnapshotQueries):
                                                      labels=labels)
         self.queue: deque[Delta] = deque()
         self._corpus: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
-        self._snap: Snapshot | None = None   # cache, invalidated per tick
+        # snapshot cache keyed (implicitly) on ``snapshot_version``: any
+        # corpus/sketch mutation — tick, migration admit/extract, restore —
+        # bumps the version and drops the cached gather, so two same-tick
+        # snapshot() calls return the identical arrays
+        self._snap: Snapshot | None = None
+        self._snap_version = 0
         self.stats: list[TickStats] = []
+        self._on_delta: list = []   # fn(keys, slot_idx, seq, dur) per tick
+        self._on_tick: list = []    # fn(service) after each tick_finish
         self._ticks_restored = 0    # ticks before the checkpoint we resumed
         # a sharded service shares one tracker across shards (the jit
         # caches are process-global; per-shard trackers would each count
@@ -317,7 +326,7 @@ class StreamService(SnapshotQueries):
         sp_dev = self.obs.tracer.begin("tick.device", cat="device",
                                        track=self.track)
         return PendingTick(B, pids, mined, sketch_pending, n_old, n_new, t0,
-                           t_disp, sp_dev)
+                           t_disp, sp_dev, keys=[d.key for d in wave])
 
     def tick_finish(self, pending: PendingTick) -> TickStats:
         """Collect a dispatched wave: materialize the mined slab, finish
@@ -341,7 +350,16 @@ class StreamService(SnapshotQueries):
         dur = np.asarray(mined.dur).reshape(B, -1)
         pat = np.broadcast_to(pids[:, None], m.shape)
         self._corpus.append((seq[m], dur[m], pat[m]))
-        self._snap = None
+        self._invalidate_snapshot()
+        if self._on_delta and pending.keys is not None:
+            # the tick's newly-mined rows, keyed by patient *key* (slot
+            # index into ``keys``), for incremental consumers (the serving
+            # feature store); migration admits are not re-delivered — the
+            # rows were already mined (and delivered) on the source shard
+            slot = np.broadcast_to(
+                np.arange(B)[:, None], m.shape)[m]
+            for fn in self._on_delta:
+                fn(pending.keys, slot, seq[m], dur[m])
 
         self.store.evict_over_budget()
         t_end = time.perf_counter()
@@ -364,6 +382,8 @@ class StreamService(SnapshotQueries):
         self._m_queue.set(len(self.queue))
         if self._retrace is not None:
             self._m_retraces.inc(self._retrace.sample())
+        for fn in self._on_tick:
+            fn(self)
         return st
 
     def run(self) -> list[TickStats]:
@@ -378,6 +398,30 @@ class StreamService(SnapshotQueries):
         """Lifetime tick count, surviving checkpoint/restore (``stats``
         holds only the ticks since this process started)."""
         return self._ticks_restored + len(self.stats)
+
+    # --- change feed --------------------------------------------------------
+    @property
+    def snapshot_version(self) -> int:
+        """Monotone corpus/sketch state version: bumps on every mutation
+        that would change ``snapshot()`` (tick, migration admit/extract,
+        restore).  Two calls at the same version return the identical
+        cached snapshot; serving replicas key their published views (and
+        staleness gauges) on it."""
+        return self._snap_version
+
+    def _invalidate_snapshot(self) -> None:
+        self._snap = None
+        self._snap_version += 1
+
+    def subscribe_delta(self, fn) -> None:
+        """Register ``fn(keys, slot_idx, seq, dur)`` for every tick's
+        newly-mined corpus rows (``slot_idx`` indexes ``keys``)."""
+        self._on_delta.append(fn)
+
+    def subscribe_tick(self, fn) -> None:
+        """Register ``fn(service)`` to run after every completed tick —
+        the publication boundary for snapshot-isolated read replicas."""
+        self._on_tick.append(fn)
 
     def sample_metrics(self) -> None:
         """Set the snapshot-time gauges that are too costly per tick:
@@ -399,7 +443,7 @@ class StreamService(SnapshotQueries):
         pid, ph, dt = self.store.extract(key)
         ids = self.sketch.extract_row(pid)
         cseq, cdur = self._extract_corpus(pid)
-        self._snap = None
+        self._invalidate_snapshot()
         return PatientState(key, ph, dt, ids, cseq, cdur)
 
     def admit_patient(self, state: PatientState) -> int:
@@ -414,7 +458,7 @@ class StreamService(SnapshotQueries):
                 np.asarray(state.corpus_seq, np.int64),
                 np.asarray(state.corpus_dur, np.int32),
                 np.full(len(state.corpus_seq), pid, np.int32)))
-        self._snap = None
+        self._invalidate_snapshot()
         return pid
 
     def _extract_corpus(self, pid: int) -> tuple[np.ndarray, np.ndarray]:
@@ -478,7 +522,7 @@ class StreamService(SnapshotQueries):
         # stats carry wall-clock timings, which are not state; only the
         # lifetime tick count survives a restore (checkpoint step numbering)
         self._ticks_restored = int(state.get("n_ticks", 0))
-        self._snap = None
+        self._invalidate_snapshot()
 
     # --- snapshot / queries -------------------------------------------------
     def snapshot(self) -> Snapshot:

@@ -194,7 +194,12 @@ class ShardedStreamService(SnapshotQueries):
         self._pending_admits: list[list] = [[] for _ in range(n_shards)]
         self._pending_keys: dict = {}       # key -> dst with state in flight
         self._tick_count = 0
+        # whole-cohort snapshot + merged-counts caches, keyed (implicitly)
+        # on ``snapshot_version`` — invalidated together on any mutation
         self._snap: Snapshot | None = None
+        self._gcounts: np.ndarray | None = None
+        self._snap_version = 0
+        self._on_tick: list = []    # fn(service) after each sharded tick
         # device-timed busy window for shard_load(): per-shard completion
         # -timed seconds (TickStats.device_s) accumulated since the last
         # shard_load() poll — maintained unconditionally (plain float
@@ -209,6 +214,37 @@ class ShardedStreamService(SnapshotQueries):
     @property
     def stats(self) -> list[TickStats]:
         return [st for svc in self.shards for st in svc.stats]
+
+    @property
+    def n_ticks(self) -> int:
+        """Sharded tick count (one per cohort-wide wave) — the publication
+        clock for serving replicas, mirroring StreamService.n_ticks."""
+        return self._tick_count
+
+    @property
+    def snapshot_version(self) -> int:
+        """Monotone whole-cohort state version (see
+        StreamService.snapshot_version); bumps on tick, migrate, pending
+        flush, and restore."""
+        return self._snap_version
+
+    def _invalidate_snapshot(self) -> None:
+        self._snap = None
+        self._gcounts = None
+        self._snap_version += 1
+
+    def subscribe_delta(self, fn) -> None:
+        """Register ``fn(keys, slot_idx, seq, dur)`` on every shard: the
+        union of per-shard delta feeds is the cohort's newly-mined rows
+        (rows are keyed by patient key, so migrations don't re-deliver)."""
+        for svc in self.shards:
+            svc.subscribe_delta(fn)
+
+    def subscribe_tick(self, fn) -> None:
+        """Register ``fn(service)`` after every completed *sharded* tick
+        (all shard waves collected, pending admits flushed, rebalance
+        applied) — the only safe publication boundary for replicas."""
+        self._on_tick.append(fn)
 
     # --- ingest -------------------------------------------------------------
     def submit(self, key, dates, phenx) -> None:
@@ -257,12 +293,14 @@ class ShardedStreamService(SnapshotQueries):
                         out.append(st)
         self.obs.tracer.finish(sp, shards=len(out))
         if out:
-            self._snap = None
+            self._invalidate_snapshot()
             self._tick_count += 1
             if self.rebalance_every \
                     and self._tick_count % self.rebalance_every == 0:
                 self.rebalance(busy_weights=self.shard_load()
                                if self.busy_weighted_rebalance else None)
+            for fn in self._on_tick:
+                fn(self)
         return out
 
     def run(self) -> list[TickStats]:
@@ -326,7 +364,7 @@ class ShardedStreamService(SnapshotQueries):
         self.migration_wall_s += time.perf_counter() - t0
         self.obs.tracer.finish(sp)
         self._m_migrations.inc()
-        self._snap = None
+        self._invalidate_snapshot()
 
     def _flush_pending(self, shard: int | None = None) -> None:
         """Phase 2 of async migration: land parked patient states on their
@@ -348,7 +386,7 @@ class ShardedStreamService(SnapshotQueries):
             pending.clear()
             self.admit_wall_s += time.perf_counter() - t0
             self.obs.tracer.finish(sp)
-            self._snap = None
+            self._invalidate_snapshot()
         self._m_pending.set(sum(len(p) for p in self._pending_admits))
 
     def _patient_costs(self, svc: StreamService) -> dict:
@@ -511,7 +549,7 @@ class ShardedStreamService(SnapshotQueries):
         self.migrations = [(decode_key(k), int(a), int(b))
                            for k, a, b in state["migrations"]]
         self._tick_count = int(state["tick_count"])
-        self._snap = None
+        self._invalidate_snapshot()
 
     # --- snapshot / queries -------------------------------------------------
     def _global_pids(self, svc: StreamService, local_pat: np.ndarray):
@@ -526,10 +564,14 @@ class ShardedStreamService(SnapshotQueries):
         return lut[local_pat]
 
     def global_counts(self) -> np.ndarray:
-        """The merged support table (one psum over the mesh when set)."""
+        """The merged support table (one psum over the mesh when set),
+        cached alongside the snapshot — repeated same-version reads pay
+        the merge once."""
         self._flush_pending()   # an in-flight patient's ids are subtracted
-        return np.asarray(merge_sharded_counts(
-            [svc.sketch.counts for svc in self.shards], self.mesh))
+        if self._gcounts is None:
+            self._gcounts = np.asarray(merge_sharded_counts(
+                [svc.sketch.counts for svc in self.shards], self.mesh))
+        return self._gcounts
 
     def snapshot(self) -> Snapshot:
         """Whole-cohort corpus (global pids) + merged support table."""

@@ -438,3 +438,45 @@ def test_incremental_sharded_and_guards():
         sess.fit(random_dbmart(np.random.default_rng(0)))
     with pytest.raises(ValueError):
         MiningSession(MiningConfig(engine="batch")).submit("a", [1], [2])
+
+
+def test_keep_mask_memoized_per_prefix(monkeypatch):
+    """Chained frames share forced-op work: ``f.screen().starts_with(x)``
+    and its extensions run each underlying query op exactly once per
+    op-chain prefix on the shared corpus, whichever frame forces first."""
+    rng = np.random.default_rng(41)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    frame = MiningSession(MiningConfig(threshold=2, screen="hash",
+                                       n_buckets_log2=H)).fit(db)
+    code = int(np.unique(db.phenx[db.phenx >= 0])[0])
+    calls = {"starts_with": 0, "min_duration": 0}
+    real_sw, real_md = queries.starts_with, queries.min_duration
+
+    def counting_sw(*a, **kw):
+        calls["starts_with"] += 1
+        return real_sw(*a, **kw)
+
+    def counting_md(*a, **kw):
+        calls["min_duration"] += 1
+        return real_md(*a, **kw)
+
+    monkeypatch.setattr(queries, "starts_with", counting_sw)
+    monkeypatch.setattr(queries, "min_duration", counting_md)
+
+    f1 = frame.screen().starts_with(code)      # ONE starts_with closure,
+    f2 = f1.min_duration(10)                   # shared by every extension
+    f3 = f1.min_duration(10).top_k(4)
+    want = f2.keep_mask().copy()               # forces screen+sw+md once
+    assert calls == {"starts_with": 1, "min_duration": 1}
+    f1.keep_mask()                             # pure prefix: fully cached
+    f3.keep_mask()                             # new md closure: runs once
+    assert calls == {"starts_with": 1, "min_duration": 2}
+    f2.top_k(3).keep_mask()                    # extends a cached prefix
+    f2.collect(); f2.unique(); f3.n_kept       # terminals reuse the cache
+    assert calls == {"starts_with": 1, "min_duration": 2}
+    assert f2.keep_mask().tobytes() == want.tobytes()
+    # memoization never leaks across corpora
+    other = MiningSession(MiningConfig(threshold=2, screen="hash",
+                                       n_buckets_log2=H)).fit(db)
+    other.screen().starts_with(code).keep_mask()
+    assert calls["starts_with"] == 2

@@ -186,3 +186,19 @@ def test_nightly_uploads_trace_artifact(workflow):
     assert upload, "slow-nightly has no artifact upload step"
     assert upload[0]["with"]["if-no-files-found"] == "error"
     assert "chaos_trace.json" in upload[0]["with"]["path"]
+
+
+def test_serving_conformance_gate_present(workflow, suites):
+    """The batched read path must stay byte-invisible: tier-1 carries a
+    gate driving a live session.serve() against frame-chain evaluation
+    and re-validating the checked-in BENCH_serving_latency.json (exact
+    masks + the >= 2x p99 speedup floor at >= 32 clients), and the
+    serving_latency suite is registered so bench-smoke regenerates the
+    artifact on every PR."""
+    assert "serving_latency" in suites
+    runs = " ".join(s.get("run", "")
+                    for s in workflow["jobs"]["tier1"]["steps"])
+    assert "BENCH_serving_latency.json" in runs
+    assert "session.serve" in runs
+    assert "p99_speedup" in runs
+    assert "min_p99_speedup" in runs

@@ -437,3 +437,62 @@ def test_overlapping_device_spans_on_forced_devices():
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "obs-overlap-ok" in proc.stdout
+
+
+# --- serving metrics: recorded when on, the shared no-ops when off ----------
+
+def _served_session(telemetry: bool):
+    rng = np.random.default_rng(59)
+    db = random_dbmart(rng, n_patients=6, max_events=10)
+    session = MiningSession(MiningConfig(threshold=2, screen="hash",
+                                         n_buckets_log2=H,
+                                         telemetry=telemetry))
+    session.fit(db)
+    return session, int(np.unique(db.phenx[db.phenx >= 0])[0])
+
+
+def test_serve_metrics_disabled_are_noop_singletons():
+    """With telemetry off the server resolves every serve.* instrument to
+    the shared no-op objects — the query hot path records nothing,
+    allocates no metric state, and ``stats()`` still reports plain
+    numbers from its own counters."""
+    from repro.serving.tspm import plan
+
+    session, code = _served_session(telemetry=False)
+    server = session.serve()
+    for m in (server._m_queries, server._m_waves, server._m_occupancy,
+              server._m_hits, server._m_misses, server._m_evictions,
+              server._m_hit_ratio, server._m_staleness, server._m_wait,
+              server._m_eval):
+        assert m is obs.NOOP_METRIC
+    assert server._tracer is obs.NOOP_TRACER
+    server.query(plan().screen(2).starts_with(code))
+    server.query(plan().screen(2).starts_with(code))
+    st = server.stats()
+    assert st["queries"] == 2 and st["cache_hits"] == 1
+    assert session.telemetry.metrics.snapshot() == {}
+
+
+def test_serve_metrics_and_spans_recorded():
+    from repro.serving.tspm import plan
+
+    session, code = _served_session(telemetry=True)
+    with session.serve() as server:
+        p = plan().screen(2).starts_with(code)
+        server.submit(p).result(timeout=60)
+        server.query(p)
+    snap = session.telemetry.metrics.snapshot()
+    assert snap["serve.queries"] == 2
+    assert snap["serve.waves"] == 1            # the second query was a hit
+    assert snap["serve.cache.hits"] == 1
+    assert snap["serve.cache.misses"] == 1
+    assert snap["serve.cache.hit_ratio"] == 0.5
+    assert snap["serve.batch_occupancy"]["count"] == 1
+    assert snap["serve.eval_s"]["count"] == 2
+    assert snap["serve.wait_s"]["count"] == 1  # only the submitted query
+    evs = session.telemetry.tracer.to_chrome_trace()["traceEvents"]
+    names = {e["name"] for e in evs if e.get("ph") == "X"}
+    assert {"serve.eval", "serve.wait"} <= names
+    serve_meta = [e for e in evs if e.get("ph") == "M"
+                  and e["args"].get("name") == "serve"]
+    assert serve_meta, "serve spans are not on their own track"

@@ -1,0 +1,583 @@
+"""Serving read path: plans, replicas, batched waves, caches, features.
+
+The headline guarantee mirrors the engine-conformance bar: for any plan
+chain the batched :class:`QueryServer` evaluator returns the **byte-
+identical** keep mask to replaying the same chain through
+``SequenceFrame`` ops on the same snapshot — across every engine, both
+screen modes, fused duration codecs, and threshold edges.  On top of
+that: snapshot isolation (same-tick snapshots are the identical cached
+arrays; published views are immutable; queries racing live ingest never
+observe a half-applied tick), LRU result caching keyed on (canonical
+plan, snapshot version), and the streaming feature store staying byte-
+identical to ``to_features`` recomputation at every tick boundary.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import ENGINES, MiningConfig, MiningSession
+from repro.data import dbmart, synthea
+from repro.serving.tspm import (FeatureStore, QueryPlan, ResultCache, plan,
+                                uncompacted_rows)
+from repro.stream.service import StreamService
+from repro.stream.shard import ShardedStreamService
+from tests.conftest import random_dbmart
+from tests.test_api import H, fit_engine
+from tests.test_stream_migration import chaos_replay
+
+
+def fitted_session(engine, db, tmp_path=None, **cfg_kw):
+    kw = dict(engine=engine, n_buckets_log2=H, budget_bytes=48 << 10,
+              tick_patients=3, threshold=3)
+    kw.update(cfg_kw)
+    if engine == "sharded":
+        kw.setdefault("n_shards", 4)
+    if engine == "files" and tmp_path is not None:
+        kw.setdefault("spill_dir", str(tmp_path / f"spill_{engine}"))
+    s = MiningSession(MiningConfig(**kw))
+    s.fit(db)
+    return s
+
+
+def random_plans(rng, codes, n=32, barriers=True):
+    """Random chains over the full op vocabulary (the property input)."""
+    kinds = ["screen", "starts_with", "ends_with", "min_duration"]
+    if barriers:
+        kinds += ["transitive_ends_with", "top_k"]
+    out = []
+    for _ in range(n):
+        p = plan()
+        for _ in range(int(rng.integers(1, 5))):
+            k = kinds[int(rng.integers(len(kinds)))]
+            if k == "screen":
+                p = p.screen(int(rng.integers(1, 4)))
+            elif k == "min_duration":
+                p = p.min_duration(int(rng.integers(0, 200)))
+            elif k == "top_k":
+                p = p.top_k(int(rng.integers(1, 12)))
+            else:
+                p = getattr(p, k)(int(rng.choice(codes)))
+        out.append(p)
+    return out
+
+
+def assert_serves_exactly(server, plans):
+    """Every plan through the batched server == the frame-chain oracle on
+    the same view, byte for byte."""
+    base = server.view().frame
+    thr = server.default_threshold
+    for p in plans:
+        keep = server.query(p).keep
+        want = p.resolve(thr).apply(base).keep_mask()
+        assert keep.dtype == want.dtype and keep.shape == want.shape, str(p)
+        assert keep.tobytes() == want.tobytes(), str(p)
+
+
+# --- plan IR ----------------------------------------------------------------
+
+def test_canonical_is_order_insensitive_and_dedups():
+    a = plan().screen(2).starts_with(7).min_duration(30)
+    b = plan().min_duration(30).starts_with(7).screen(2).starts_with(7)
+    assert a.canonical() == b.canonical()
+    assert a.ops != b.ops          # original order is preserved on the plan
+    # distinct args are NOT merged
+    assert plan().starts_with(7).starts_with(8).canonical() \
+        != plan().starts_with(7).canonical()
+
+
+def test_barriers_pin_evaluation_order():
+    a = plan().screen(2).top_k(4).min_duration(30)
+    b = plan().min_duration(30).top_k(4).screen(2)
+    assert a.canonical() != b.canonical()   # runs straddle the barrier
+    vec, suffix = a.split_canonical()
+    assert vec == (("screen", 2),)
+    assert suffix == (("top_k", 4), ("min_duration", 30))
+    # a pure predicate chain has no suffix at all
+    vec, suffix = plan().screen(2).starts_with(1).split_canonical()
+    assert suffix == () and len(vec) == 2
+
+
+def test_resolve_fills_deferred_screen_or_raises():
+    p = plan().screen().starts_with(3)
+    assert p.resolve(5).ops[0] == ("screen", 5)
+    assert p.resolve(5).resolve(9).ops[0] == ("screen", 5)   # idempotent
+    with pytest.raises(ValueError):
+        p.resolve(None)
+    with pytest.raises(ValueError):
+        p.canonical()              # unresolved plans have no canonical form
+    # resolved plans pass through untouched (same object)
+    q = plan().screen(2)
+    assert q.resolve(5) is q
+
+
+def test_plan_hashable_and_printable():
+    assert hash(plan().screen(2)) == hash(QueryPlan((("screen", 2),)))
+    assert "screen(?)" in str(plan().screen())
+    assert str(plan()) == "(all)"
+
+
+# --- batched conformance: server == frame, every engine ---------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_serve_conformance_all_engines(tmp_path, engine):
+    pats, dates, phx, _ = synthea.generate_cohort(
+        n_patients=24, avg_events=12, seed=33)
+    db = dbmart.from_rows(pats, dates, phx)
+    rng = np.random.default_rng(100)
+    codes = np.unique(db.phenx[db.phenx >= 0])
+    session = fitted_session(engine, db, tmp_path, screen="hash")
+    server = session.serve(batch_size=8)
+    assert_serves_exactly(server, random_plans(rng, codes, n=24))
+
+
+@pytest.mark.parametrize("screen", ["sorted", "fused"])
+def test_serve_conformance_screen_modes(screen):
+    rng = np.random.default_rng(300 + len(screen))
+    db = random_dbmart(rng, n_patients=10, max_events=14)
+    codes = np.unique(db.phenx[db.phenx >= 0])
+    session = fitted_session("batch", db, screen=screen, threshold=2)
+    server = session.serve(batch_size=4)
+    assert_serves_exactly(server, random_plans(rng, codes, n=24))
+
+
+def test_serve_conformance_fused_duration_codec():
+    rng = np.random.default_rng(91)
+    db = random_dbmart(rng, n_patients=9, max_events=12)
+    codes = np.unique(db.phenx[db.phenx >= 0])
+    for engine in ("batch", "stream"):
+        session = fitted_session(engine, db, screen="hash",
+                                 fuse_duration=True, threshold=2)
+        server = session.serve(batch_size=8)
+        assert_serves_exactly(server, random_plans(rng, codes, n=16))
+
+
+def test_serve_threshold_edges():
+    """screen at 0, the exact max support, one past it, and huge — the
+    kernel's >= comparison must agree with the frame screen everywhere."""
+    rng = np.random.default_rng(207)
+    db = random_dbmart(rng, n_patients=10, max_events=14, n_codes=5)
+    probe = fit_engine("batch", db, threshold=1, screen="hash")
+    sup = probe.collect().support
+    assert len(sup), "degenerate cohort"
+    thr = int(sup.max())
+    session = fitted_session("batch", db, screen="hash", threshold=1)
+    server = session.serve()
+    code = int(np.unique(db.phenx[db.phenx >= 0])[0])
+    edges = [plan().screen(t) for t in (0, 1, thr, thr + 1, 10**9)]
+    edges += [plan().screen(t).starts_with(code) for t in (thr, thr + 1)]
+    assert_serves_exactly(server, edges)
+    assert server.query(plan().screen(10**9)).n_kept == 0
+
+
+def test_equivalent_plans_share_one_cache_entry():
+    """Canonicalization makes permuted chains one entry and one program."""
+    rng = np.random.default_rng(5)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    session = fitted_session("batch", db, screen="hash")
+    server = session.serve()
+    c = int(np.unique(db.phenx[db.phenx >= 0])[0])
+    a = server.query(plan().screen(2).starts_with(c).min_duration(10))
+    h0 = server.stats()["cache_hits"]
+    b = server.query(plan().min_duration(10).screen(2).starts_with(c))
+    assert server.stats()["cache_hits"] == h0 + 1
+    assert a.keep.tobytes() == b.keep.tobytes()
+    assert len(server.cache) == 1
+
+
+def test_query_result_terminals_match_frame():
+    rng = np.random.default_rng(11)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    session = fitted_session("batch", db, screen="hash")
+    server = session.serve()
+    c = int(np.unique(db.phenx[db.phenx >= 0])[0])
+    p = plan().screen(2).starts_with(c)
+    r = server.query(p)
+    want = p.resolve(3).apply(server.view().frame)
+    for a, b in zip(r.collect(), want.collect()):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    if want.vocab is not None:
+        assert r.decode() == want.decode()
+    assert r.n_kept == want.n_kept
+    ids, sup = r.unique()
+    wids, wsup = want.unique()
+    assert ids.tobytes() == wids.tobytes()
+    assert sup.tobytes() == wsup.tobytes()
+
+
+def test_server_input_validation():
+    rng = np.random.default_rng(2)
+    db = random_dbmart(rng, n_patients=6, max_events=8)
+    session = fitted_session("batch", db)
+    with pytest.raises(ValueError):
+        session.serve(batch_size=0)
+    server = session.serve()
+    with pytest.raises(TypeError):
+        server.query("screen")
+    with pytest.raises(RuntimeError):
+        server.features()          # built without feature_ids
+
+
+# --- snapshot isolation -----------------------------------------------------
+
+def test_snapshot_same_tick_identity_single_shard():
+    """Two snapshot() calls at the same version return the identical
+    cached object; only mutations (tick / extract / admit) invalidate."""
+    svc = StreamService(tick_patients=2, n_buckets_log2=H)
+    svc.submit(0, [1, 2], [5, 6])
+    svc.submit(1, [3], [7])
+    svc.tick()
+    v = svc.snapshot_version
+    s1 = svc.snapshot()
+    assert svc.snapshot() is s1
+    svc.submit(0, [4], [8])        # queueing alone is not a mutation
+    assert svc.snapshot() is s1 and svc.snapshot_version == v
+    svc.tick()
+    assert svc.snapshot_version > v
+    s2 = svc.snapshot()
+    assert s2 is not s1 and svc.snapshot() is s2
+    v2 = svc.snapshot_version
+    state = svc.extract_patient(0)
+    assert svc.snapshot_version > v2
+    assert svc.snapshot() is not s2
+    svc.admit_patient(state)
+    assert svc.snapshot() is svc.snapshot()
+
+
+def test_snapshot_same_tick_identity_sharded():
+    svc = ShardedStreamService(n_shards=2, tick_patients=2, n_buckets_log2=H)
+    svc.submit(0, [1, 2], [5, 6])
+    svc.submit(1, [3, 4], [7, 8])
+    svc.run()
+    s1 = svc.snapshot()
+    assert svc.snapshot() is s1
+    v = svc.snapshot_version
+    svc.migrate(0, 1 - svc.router.route(0))
+    assert svc.snapshot_version > v
+    assert svc.snapshot() is not s1
+
+
+def test_replica_publishes_at_tick_boundaries():
+    rng = np.random.default_rng(17)
+    db = random_dbmart(rng, n_patients=6, max_events=10)
+    session = MiningSession(MiningConfig(
+        threshold=2, tick_patients=2, n_buckets_log2=H))
+    server = session.serve()
+    v0 = server.view()
+    assert server.view() is v0     # stable between ticks
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        session.submit(p, db.date[p, :n], db.phenx[p, :n])
+    session.service.tick()
+    v1 = server.view()
+    assert v1 is not v0
+    assert v1.tick == session.service.n_ticks
+    assert v1.version == session.service.snapshot_version
+    assert server.replica.staleness_ticks() == 0
+    # old views are frozen: their frames still answer on the old corpus
+    assert v0.n_rows <= v1.n_rows
+
+
+def test_manual_publish_and_staleness():
+    rng = np.random.default_rng(19)
+    db = random_dbmart(rng, n_patients=6, max_events=10)
+    session = MiningSession(MiningConfig(
+        threshold=2, tick_patients=2, n_buckets_log2=H))
+    server = session.serve(auto_publish=False)
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        session.submit(p, db.date[p, :n], db.phenx[p, :n])
+    ticks_before = server.view().tick
+    session.service.run()
+    assert server.view().tick == ticks_before          # nothing auto-published
+    assert server.replica.staleness_ticks() \
+        == session.service.n_ticks - ticks_before
+    server.publish()
+    assert server.replica.staleness_ticks() == 0
+    assert server.view().tick == session.service.n_ticks
+
+
+def test_chaos_queries_never_see_partial_ticks():
+    """Client threads hammer the background server while the ingest thread
+    replays the migration-chaos schedule (submits, ticks, migrations,
+    rebalances).  Every result must be self-consistent with the snapshot
+    it reports (oracle replay on its own view), that snapshot must be one
+    the ingest thread actually published (byte-identical corpus to the
+    frame recorded inside the tick hook), and each client's view ticks
+    must be non-decreasing."""
+    rng = np.random.default_rng(4242)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    codes = np.unique(db.phenx[db.phenx >= 0])
+    session = MiningSession(MiningConfig(
+        engine="sharded", n_shards=2, threshold=2, tick_patients=2,
+        n_buckets_log2=H))
+    server = session.serve(batch_size=4)
+
+    published = {}      # version -> corpus triple bytes, from the hook
+
+    def record(svc):
+        fr = session.frame()
+        published[svc.snapshot_version] = (
+            fr._corpus.seq.tobytes(), fr._corpus.dur.tobytes(),
+            fr._corpus.patient.tobytes())
+    session.service.subscribe_tick(record)
+    record(session.service)        # the pre-ingest (empty) publication
+
+    plans = random_plans(np.random.default_rng(1), codes, n=48)
+    results: list[list] = [[] for _ in range(4)]
+
+    def client(i):
+        # a fixed per-client query count (not a stop flag): coverage does
+        # not depend on how fast the chaos schedule drains under load
+        r = np.random.default_rng(i)
+        for _ in range(12):
+            p = plans[int(r.integers(len(plans)))]
+            results[i].append((p, server.submit(p).result(timeout=120)))
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+    server.start()
+    for t in threads:
+        t.start()
+    chaos_replay(db, session.service, rng)
+    for t in threads:
+        t.join()
+    server.stop()
+
+    checked = 0
+    for chunk in results:
+        ticks = [r.view.tick for _, r in chunk]
+        assert ticks == sorted(ticks), "a client saw time go backwards"
+        for p, r in chunk:
+            want = p.resolve(2).apply(r.view.frame).keep_mask()
+            assert r.keep.tobytes() == want.tobytes(), str(p)
+            assert r.view.version in published, \
+                "query saw a snapshot no tick boundary ever published"
+            c = r.view.frame._corpus
+            assert (c.seq.tobytes(), c.dur.tobytes(),
+                    c.patient.tobytes()) == published[r.view.version]
+            checked += 1
+    assert checked == 48, "a client dropped queries"
+    # post-chaos: the server answers on the final corpus exactly
+    server.publish()
+    assert_serves_exactly(server, plans[:12])
+
+
+# --- background loop --------------------------------------------------------
+
+def test_submit_matches_sync_query_and_context_manager():
+    rng = np.random.default_rng(23)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    codes = np.unique(db.phenx[db.phenx >= 0])
+    session = fitted_session("batch", db, screen="hash")
+    plans = random_plans(rng, codes, n=16)
+    with session.serve(batch_size=4) as server:
+        tickets = [server.submit(p) for p in plans]
+        got = [t.result(timeout=60) for t in tickets]
+    base = server.view().frame
+    for p, r in zip(plans, got):
+        assert r.keep.tobytes() \
+            == p.resolve(3).apply(base).keep_mask().tobytes()
+    st = server.stats()
+    assert st["queries"] >= len(plans)
+    assert 0 < st["waves"] <= st["queries"]
+
+
+def test_background_errors_surface_on_tickets():
+    rng = np.random.default_rng(29)
+    db = random_dbmart(rng, n_patients=6, max_events=8)
+    session = fitted_session("batch", db)
+    server = session.serve()
+    boom = RuntimeError("kernel exploded")
+
+    def bad_wave(view, plans):
+        raise boom
+    server._eval_wave = bad_wave
+    t = server.submit(plan().screen(2))
+    with pytest.raises(RuntimeError, match="kernel exploded"):
+        t.result(timeout=60)
+    server.stop()
+
+
+# --- result cache -----------------------------------------------------------
+
+def test_result_cache_lru_semantics():
+    c = ResultCache(capacity=2)
+    with pytest.raises(ValueError):
+        ResultCache(capacity=0)
+    a, b, d = (np.ones(1), np.zeros(1), np.ones(2))
+    c.put(("a", 0), a)
+    c.put(("b", 0), b)
+    assert c.get(("a", 0)) is a            # touches a: b is now LRU
+    c.put(("d", 0), d)                     # evicts b
+    assert c.get(("b", 0)) is None
+    assert c.get(("d", 0)) is d
+    assert (c.hits, c.misses, c.evictions) == (2, 1, 1)
+    assert c.hit_ratio() == pytest.approx(2 / 3)
+    assert len(c) == 2
+
+
+def test_result_cache_invalidate_below_is_gc():
+    c = ResultCache(capacity=8)
+    for v in range(4):
+        c.put((("screen", 2), v), np.ones(1))
+    assert c.invalidate_below(2) == 2
+    assert len(c) == 2
+    assert c.get((("screen", 2), 1)) is None
+    assert c.get((("screen", 2), 3)) is not None
+
+
+def test_publication_invalidates_server_cache():
+    rng = np.random.default_rng(31)
+    db = random_dbmart(rng, n_patients=6, max_events=10)
+    session = MiningSession(MiningConfig(
+        threshold=2, tick_patients=2, n_buckets_log2=H))
+    server = session.serve()
+    for p in range(3):
+        n = int(db.nevents[p])
+        session.submit(p, db.date[p, :n], db.phenx[p, :n])
+    session.service.run()
+    p = plan().screen(2)
+    server.query(p)
+    m0 = server.stats()["cache_misses"]
+    server.query(p)
+    assert server.stats()["cache_misses"] == m0          # warm hit
+    for q in range(3, db.n_patients):
+        n = int(db.nevents[q])
+        session.submit(q, db.date[q, :n], db.phenx[q, :n])
+    session.service.run()                                # publishes + GCs
+    server.query(p)
+    assert server.stats()["cache_misses"] == m0 + 1      # new version: miss
+    assert len(server.cache) == 1                        # old entry GC'd
+
+
+# --- streaming feature store ------------------------------------------------
+
+def _feature_ids_for(db):
+    """A strictly-increasing id list spanning present and absent pairs."""
+    fr = fit_engine("batch", db, threshold=1, screen="hash")
+    ids = np.unique(np.asarray(fr._corpus.seq))
+    picked = ids[:: max(1, len(ids) // 12)]
+    return np.unique(np.concatenate(
+        [picked, [int(ids.max()) + 7]])).astype(np.int64)
+
+
+def assert_features_identical(server, ids):
+    got = server.features()
+    want = server.view().frame.to_features(feature_ids=ids)
+    assert np.asarray(got.x).tobytes() == np.asarray(want.x).tobytes()
+    assert np.asarray(got.feature_ids).tobytes() \
+        == np.asarray(want.feature_ids).tobytes()
+    assert int(got.n_features) == int(want.n_features)
+
+
+@pytest.mark.parametrize("screen", ["hash", "fused"])
+def test_feature_store_tracks_every_tick(screen):
+    """Incremental per-tick maintenance == full to_features recomputation
+    on the matching snapshot, at every tick boundary, both screen modes."""
+    rng = np.random.default_rng(61)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    ids = _feature_ids_for(db)
+    session = MiningSession(MiningConfig(
+        threshold=2, tick_patients=2, n_buckets_log2=H, screen=screen))
+    server = session.serve(feature_ids=ids)
+    assert_features_identical(server, ids)       # empty bootstrap
+    for p in range(db.n_patients):
+        n = int(db.nevents[p])
+        session.submit(p, db.date[p, :n], db.phenx[p, :n])
+        session.service.tick()
+        assert_features_identical(server, ids)
+    session.run()
+    assert_features_identical(server, ids)
+
+
+def test_feature_store_bootstrap_midstream():
+    """serve() attached after ticks already ran: the bootstrap snapshot
+    plus subsequent deltas still reproduce to_features exactly."""
+    rng = np.random.default_rng(67)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    ids = _feature_ids_for(db)
+    session = MiningSession(MiningConfig(
+        threshold=2, tick_patients=2, n_buckets_log2=H))
+    half = db.n_patients // 2
+    for p in range(half):
+        n = int(db.nevents[p])
+        session.submit(p, db.date[p, :n], db.phenx[p, :n])
+    session.service.run()
+    server = session.serve(feature_ids=ids)      # bootstrap path
+    assert_features_identical(server, ids)
+    for p in range(half, db.n_patients):
+        n = int(db.nevents[p])
+        session.submit(p, db.date[p, :n], db.phenx[p, :n])
+        session.service.tick()
+        assert_features_identical(server, ids)
+
+
+def test_feature_store_batch_session():
+    rng = np.random.default_rng(71)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    ids = _feature_ids_for(db)
+    session = fitted_session("batch", db, screen="hash", threshold=2)
+    server = session.serve(feature_ids=ids)
+    assert_features_identical(server, ids)
+
+
+def test_feature_store_validation():
+    with pytest.raises(ValueError):
+        FeatureStore([3, 1, 2])                  # not sorted
+    with pytest.raises(ValueError):
+        FeatureStore([1, 1])                     # not strictly increasing
+    s = FeatureStore([])
+    s.stage_rows(np.asarray([0]), np.asarray([5]))   # no-op, no raise
+    with pytest.raises(TypeError):
+        FeatureStore([1, 2]).stage_rows(np.asarray(["a"]), np.asarray([1]))
+
+
+def test_feature_store_rejects_keyed_cohorts():
+    session = MiningSession(MiningConfig(
+        threshold=2, tick_patients=2, n_buckets_log2=H))
+    session.submit("patient-a", [1, 2], [5, 6])
+    session.service.run()
+    with pytest.raises(TypeError):
+        session.serve(feature_ids=np.asarray([5, 6], np.int64))
+    # feature-free serving of the same cohort is fine
+    server = session.serve()
+    assert server.query(plan().screen(1)).n_kept >= 0
+
+
+def test_feature_matrices_are_point_in_time():
+    """A view captured before later ticks keeps its original matrix."""
+    rng = np.random.default_rng(73)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    ids = _feature_ids_for(db)
+    session = MiningSession(MiningConfig(
+        threshold=2, tick_patients=2, n_buckets_log2=H))
+    server = session.serve(feature_ids=ids)
+    half = db.n_patients // 2
+    for p in range(half):
+        n = int(db.nevents[p])
+        session.submit(p, db.date[p, :n], db.phenx[p, :n])
+    session.service.run()
+    early = server.view()
+    frozen = None if early.feature_x is None else early.feature_x.copy()
+    for p in range(half, db.n_patients):
+        n = int(db.nevents[p])
+        session.submit(p, db.date[p, :n], db.phenx[p, :n])
+    session.service.run()
+    if frozen is None:
+        assert early.feature_x is None
+    else:
+        assert early.feature_x.tobytes() == frozen.tobytes()
+    assert_features_identical(server, ids)       # and the front view moved on
+
+
+def test_uncompacted_rows_batch_and_stream_agree():
+    """Bootstrap rows from a drained live service match the batch fit's
+    corpus as multisets (the live snapshot is unsorted)."""
+    rng = np.random.default_rng(79)
+    db = random_dbmart(rng, n_patients=6, max_events=10)
+    batch = fitted_session("batch", db, threshold=2, screen="hash")
+    stream = fitted_session("stream", db, threshold=2, screen="hash")
+    bs, bp = uncompacted_rows(batch)
+    ss, sp = uncompacted_rows(stream)
+    assert sorted(zip(bp.tolist(), bs.tolist())) \
+        == sorted(zip(sp.tolist(), ss.tolist()))
