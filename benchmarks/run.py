@@ -52,6 +52,11 @@
                      masks asserted byte-identical, p99 speedup
                      asserted >= 2x (``--suite serving_latency`` writes
                      BENCH_serving_latency.json)
+  journal_overhead -> hash-chained tick journal on/off ingest: mined
+                     bytes asserted identical, the journal verified and
+                     replayed byte-exactly, overhead gated < 5%
+                     (``--suite journal_overhead`` writes
+                     BENCH_journal_overhead.json)
 
 An unknown ``--suite`` prints the available suites instead of failing
 opaquely.  Prints ``name,us_per_call,derived`` CSV rows.
@@ -198,6 +203,13 @@ def serving_latency_bench(small=True, out_path=None):
     serving_latency.main(small=small, json_path=out_path, backend="jnp")
 
 
+def journal_overhead_bench(small=True, out_path=None):
+    from benchmarks import journal_overhead
+
+    out_path = out_path or "BENCH_journal_overhead.json"
+    journal_overhead.main(small=small, json_path=out_path, backend="kernel")
+
+
 def storage_tiering_bench(small=True, out_path=None):
     from benchmarks import storage_tiering
 
@@ -224,6 +236,9 @@ SUITES = {
     "serving_latency": ("batched query serving vs per-query eval "
                         "(>= 2x p99 at 32 clients asserted)",
                         serving_latency_bench),
+    "journal_overhead": ("hash-chained tick journal on/off ingest "
+                         "(< 5% ceiling, replay asserted exact)",
+                         journal_overhead_bench),
 }
 
 

@@ -19,6 +19,12 @@ objects:
     methods (``.screen``, ``.starts_with``, ``.transitive_ends_with``,
     ``.top_k``, ``.to_features``, ``.decode``, ...).
 
+Streaming sessions additionally expose the typed event stream
+(``session.events()`` / ``session.service.subscribe``) and, with
+``MiningConfig(journal_dir=...)``, the verifiable tick journal:
+``session.journal()``, ``session.verify()``, and
+``MiningSession.replay(journal_dir)`` (see :mod:`repro.journal`).
+
 Conformance invariant (tests/test_api.py): for a fixed cohort,
 ``MiningSession.fit`` output — kept sequences, supports, decoded strings —
 is byte-identical across every engine the planner can select.

@@ -80,6 +80,15 @@ class MiningConfig:
     min_gain: float = 0.05               # migration hysteresis (x mean load)
     busy_weighted_rebalance: bool = False  # weight LPT by shard_load()
 
+    # --- journaling ---------------------------------------------------------
+    journal_dir: str | None = None  # hash-chained tick journal location
+    #                                 (repro.journal); None = no journal.
+    #                                 Streaming engines only: every delta,
+    #                                 tick, eviction, migration, and
+    #                                 rebalance is recorded, replayable
+    #                                 byte-identically, and verifiable
+    journal_commit_every: int = 16  # merkle commitment cadence (ticks)
+
     # --- observability ------------------------------------------------------
     telemetry: bool = False         # metrics registry + span tracer (repro.obs)
     jax_annotations: bool = False   # mirror spans into jax.profiler traces
@@ -104,6 +113,8 @@ class MiningConfig:
                 f"unknown placement {self.placement!r}; one of {PLACEMENTS}")
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
+        if self.journal_commit_every < 1:
+            raise ValueError("journal_commit_every must be >= 1")
 
     def replace(self, **kw) -> "MiningConfig":
         return dataclasses.replace(self, **kw)

@@ -35,6 +35,7 @@ from repro.core import chunking, mining, sparsity
 from repro.core.encoding import Vocab
 from repro.data.dbmart import DBMart
 from repro.storage.state import pack_tree, unpack_tree
+from repro.stream.events import CheckpointTaken, EventTap
 from repro.stream.service import StreamService
 from repro.stream.shard import ShardedStreamService, ShardRouter
 from repro.training import checkpoint as ckpt_lib
@@ -61,6 +62,7 @@ class MiningSession:
             jax_annotations=self.config.jax_annotations)
             if self.config.telemetry else obs_lib.NOOP)
         self.service: StreamService | ShardedStreamService | None = None
+        self._journal = None      # TickJournal when config.journal_dir is set
         self.last_plan: Plan | None = None
         self.last_frame: SequenceFrame | None = None
         self.restore_extra: dict = {}   # user extras from the checkpoint
@@ -270,14 +272,24 @@ class MiningSession:
                   disk_bytes=c.disk_bytes, disk_dir=c.disk_dir)
         tel = self.telemetry if self.telemetry.enabled else None
         if not sharded:
-            return StreamService(telemetry=tel, **kw)
-        return ShardedStreamService(
-            n_shards=c.n_shards, router=router, mesh=self.mesh,
-            rebalance_every=c.rebalance_every,
-            imbalance_threshold=c.imbalance_threshold,
-            min_gain=c.min_gain,
-            busy_weighted_rebalance=c.busy_weighted_rebalance,
-            placement=planner.resolve_placement(c), telemetry=tel, **kw)
+            svc = StreamService(telemetry=tel, **kw)
+        else:
+            svc = ShardedStreamService(
+                n_shards=c.n_shards, router=router, mesh=self.mesh,
+                rebalance_every=c.rebalance_every,
+                imbalance_threshold=c.imbalance_threshold,
+                min_gain=c.min_gain,
+                busy_weighted_rebalance=c.busy_weighted_rebalance,
+                placement=planner.resolve_placement(c), telemetry=tel, **kw)
+        if c.journal_dir is not None:
+            from repro.journal.journal import TickJournal
+            self._journal = TickJournal(c.journal_dir,
+                                        commit_every=c.journal_commit_every,
+                                        telemetry=tel)
+            self._journal.attach(svc,
+                                 engine="sharded" if sharded else "stream",
+                                 config=dataclasses.asdict(c))
+        return svc
 
     # --- checkpoint / resume ------------------------------------------------
     def checkpoint(self, ckpt_dir: str, step: int | None = None,
@@ -308,9 +320,13 @@ class MiningSession:
                     "config": dataclasses.asdict(self.config),
                     "state": state}
             json_tree, arrays = pack_tree(tree)
-            return ckpt_lib.save(ckpt_dir, step, arrays,
+            path = ckpt_lib.save(ckpt_dir, step, arrays,
                                  extra={"session": json_tree,
                                         "user": extra or {}})
+        if self.service.events.wants(CheckpointTaken):
+            self.service.events.emit(
+                CheckpointTaken(step=int(step), path=path))
+        return path
 
     @classmethod
     def restore(cls, ckpt_dir: str, *, mesh=None,
@@ -343,6 +359,74 @@ class MiningSession:
             session.last_plan = planner.make_plan(config, incremental=True)
         session.restore_extra = manifest["extra"].get("user", {})
         return session
+
+    # --- events / journal ---------------------------------------------------
+    def events(self, kinds=None, maxlen: int | None = 4096) -> EventTap:
+        """A pull-side tap on the session's typed event stream
+        (:mod:`repro.stream.events`): iterate it to drain every
+        ``SessionEvent`` (``DeltaSubmitted`` / ``TickCompleted`` /
+        ``Evicted`` / ``Migrated`` / ``Rebalanced`` / ``CheckpointTaken``)
+        emitted since the last drain.  ``kinds`` filters to an event
+        class or tuple of them.  Push-side consumers subscribe on
+        ``session.service.subscribe(fn, kinds=...)`` instead."""
+        return EventTap(self._ensure_service(), kinds=kinds, maxlen=maxlen)
+
+    def journal(self):
+        """The live :class:`~repro.journal.journal.TickJournal`, or None
+        when the session was built without ``journal_dir``."""
+        return self._journal
+
+    def verify(self, journal_dir: str | None = None):
+        """Verify a journal against this live session -> ``VerifyResult``.
+
+        With no argument, verifies the session's own journal; pass a
+        ``journal_dir`` to check a foreign copy (an auditor's, a
+        claimed fork).  Three layers (see :mod:`repro.journal.verify`):
+        segment/chain structure, byte-exact replay through a shadow
+        journal (merkle commitments re-derived and compared), and —
+        because a live session is present — an entry-by-entry fork
+        check against the session's own log plus a final-state
+        comparison.  Any failure carries a typed ``FraudProof`` naming
+        the first divergent tick."""
+        from repro.journal import verify as jv
+        own = self._journal
+        if own is not None:
+            own.flush()
+        target = journal_dir if journal_dir is not None else \
+            (own.root if own is not None else None)
+        if target is None:
+            raise RuntimeError("nothing to verify: the session has no "
+                               "journal (set MiningConfig.journal_dir) and "
+                               "no journal_dir was given")
+        res, replayed = jv.verify_replay(target, mesh=self.mesh,
+                                         vocab=self.vocab)
+        if not res.ok:
+            return res
+        if own is not None and journal_dir is not None \
+                and os.path.abspath(journal_dir) != os.path.abspath(own.root):
+            proof = jv.compare_journals(own.entries(),
+                                        jv.read_journal(journal_dir))
+            if proof is not None:
+                return dataclasses.replace(res, ok=False, proof=proof)
+        if self.service is not None and replayed is not None:
+            proof = jv.state_divergence(self.service, replayed.service,
+                                        n_ticks=res.n_ticks)
+            if proof is not None:
+                return dataclasses.replace(res, ok=False, proof=proof)
+        return res
+
+    @classmethod
+    def replay(cls, journal_dir: str, upto_tick: int | None = None, *,
+               mesh=None, vocab: Vocab | None = None) -> "MiningSession":
+        """Reconstruct a session from a journal by re-applying its
+        recorded commands — corpus, sketch table, and router pins are
+        byte-identical to the recorded run's state (optionally only
+        through ``upto_tick``).  Complements :meth:`restore`: a
+        checkpoint is a state snapshot, the journal is the full
+        audited history."""
+        from repro.journal import verify as jv
+        return jv.replay(journal_dir, upto_tick=upto_tick, mesh=mesh,
+                         vocab=vocab)
 
     # --- observability ------------------------------------------------------
     def metrics(self) -> dict:

@@ -6,10 +6,18 @@ Generates a Synthea-style cohort, replays it wave-by-wave through the
 unified session API (``repro.api.MiningSession`` — the planner picks the
 stream or sharded engine from the config), and prints ingest throughput
 plus sample chainable-frame queries.
+
+``--journal-dir DIR`` journals every session event into a hash-chained
+tick journal (repro.journal) and verifies it after the run;
+``--replay-journal DIR`` skips ingest entirely and reconstructs the
+session from a journal instead.  Both modes print a ``state_digest=``
+line over the final corpus/sketch/pid state, so a replay drill can diff
+a journaled run against its replay across processes (ci.yml nightly).
 """
 from __future__ import annotations
 
 import argparse
+import hashlib
 import time
 
 import numpy as np
@@ -43,6 +51,21 @@ def replay_waves(db, svc, n_waves: int, seed: int = 0, start_wave: int = 0):
                 lo, hi = int(c[w]), int(c[w + 1])
                 svc.submit(p, db.date[p, lo:hi], db.phenx[p, lo:hi])
         yield w
+
+
+def state_digest(svc) -> str:
+    """One hex digest over everything the journal replay must reproduce
+    (corpus, sketch table, pid table) — the cross-process comparison key
+    for the replay drill."""
+    snap = svc.snapshot()
+    h = hashlib.sha256()
+    for name in ("seq", "dur", "patient", "counts"):
+        h.update(np.ascontiguousarray(
+            np.asarray(getattr(snap, name))).tobytes())
+    pids = svc.pids if hasattr(svc, "shards") else svc.store.pids
+    h.update(repr(sorted((str(k), int(v))
+                         for k, v in dict(pids).items())).encode())
+    return h.hexdigest()
 
 
 def main(argv=None):
@@ -104,8 +127,28 @@ def main(argv=None):
     ap.add_argument("--busy-weighted-rebalance", action="store_true",
                     help="weight LPT rebalancing by the device-timed "
                          "shard_load() busy fractions")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="append a hash-chained tick journal of every "
+                         "session event here and verify it after the run")
+    ap.add_argument("--journal-commit-every", type=int, default=16,
+                    metavar="N", help="merkle commitment cadence (ticks) "
+                                      "for --journal-dir")
+    ap.add_argument("--replay-journal", default=None, metavar="DIR",
+                    help="skip ingest: reconstruct the session from this "
+                         "journal directory (cohort/engine flags are "
+                         "ignored — the journal's open entry carries the "
+                         "config) and print its state digest")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.replay_journal:
+        t0 = time.perf_counter()
+        session = MiningSession.replay(args.replay_journal)
+        dt = time.perf_counter() - t0
+        svc = session.service
+        print(f"replayed {args.replay_journal} in {dt:.2f}s "
+              f"({svc.n_ticks} ticks)")
+        print(f"state_digest={state_digest(svc)}")
+        return session
     if args.rebalance_every and args.shards <= 1:
         ap.error("--rebalance-every requires --shards > 1 "
                  "(rebalancing migrates patients between shards)")
@@ -129,7 +172,9 @@ def main(argv=None):
         rebalance_every=args.rebalance_every or None,
         imbalance_threshold=args.imbalance_threshold,
         min_gain=args.min_gain, telemetry=telemetry,
-        busy_weighted_rebalance=args.busy_weighted_rebalance)
+        busy_weighted_rebalance=args.busy_weighted_rebalance,
+        journal_dir=args.journal_dir,
+        journal_commit_every=args.journal_commit_every)
     mesh = None
     router = None
     if args.shards > 1:
@@ -185,6 +230,15 @@ def main(argv=None):
         print(f"migrations={len(svc.migrations)} shard_load_mb=" +
               "/".join(f"{b / (1 << 20):.1f}" for b in loads) +
               " shard_busy=" + "/".join(f"{f:.2f}" for f in busy))
+
+    if args.journal_dir:
+        res = session.verify()
+        j = session.journal()
+        print(f"journal {args.journal_dir}: {j.n_entries} entries, "
+              f"{j.n_commits} commitments -> {res}")
+        print(f"state_digest={state_digest(svc)}")
+        if not res.ok:
+            raise SystemExit(f"journal verification failed: {res.proof}")
 
     if args.metrics_json:
         import json

@@ -20,11 +20,14 @@ Exactness argument (property-tested in tests/test_serving.py):
     with a per-feature column mask ``counts[hash(id)] >= threshold`` —
     applied at matrix build time against the view's own table.
 
-Scope: the store tracks the *delta* path (rows mined by ticks, plus the
-bootstrap snapshot taken when serving starts).  Patients extracted from a
-live service keep their accumulated features — presence is append-only —
-and rows admitted by migration bypass the store; serve feature-free or
-re-bootstrap around migration choreography.
+Scope: the store tracks the full mined-row feed — rows mined by ticks
+(the delta hook), the bootstrap snapshot taken when serving starts, and
+rows arriving with migration-admitted patients (the ``Migrated`` event
+with ``src=None`` carries the admitted state; ``on_admitted`` stages its
+already-mined corpus rows, which never appear in any tick feed).
+Patients extracted from a live service keep their accumulated features —
+presence is append-only.  Internal shard-to-shard migrations need no
+handling: their rows were already staged by past tick feeds.
 """
 from __future__ import annotations
 
@@ -85,6 +88,16 @@ class FeatureStore:
             raise TypeError("feature store requires integer patient keys; "
                             f"got dtype {keys.dtype}")
         self.stage_rows(keys[np.asarray(slot_idx)], seq)
+
+    def on_admitted(self, state) -> None:
+        """Migration-admit subscriber (``Migrated`` with ``src=None``):
+        stage the admitted patient's already-mined corpus rows — they
+        predate this cohort's ticks, so no tick feed will ever carry
+        them."""
+        seq = np.asarray(state.corpus_seq, np.int64).reshape(-1)
+        if len(self.feature_ids) == 0 or len(seq) == 0:
+            return
+        self.stage_rows(np.full(len(seq), state.key), seq)
 
     def fold(self) -> np.ndarray:
         """Fold staged deltas into a fresh matrix and return it.

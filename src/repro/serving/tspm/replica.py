@@ -1,8 +1,9 @@
 """Snapshot-isolated read replicas of mining state.
 
 A :class:`ReadReplica` sits between a :class:`~repro.api.session.MiningSession`
-and the query path.  At every tick boundary (the service's ``subscribe_tick``
-hook) it *publishes* a fresh :class:`ReplicaView` — an immutable bundle of
+and the query path.  At every tick boundary (a typed ``TickCompleted``
+subscription on the service — see :mod:`repro.stream.events`) it
+*publishes* a fresh :class:`ReplicaView` — an immutable bundle of
 the snapshot frame, its ``snapshot_version``, its tick count, and the
 feature-store presence matrix folded at the same boundary — and swaps it in
 as the front view with one reference assignment.  Double buffering falls

@@ -45,6 +45,7 @@ from repro.serving.tspm.features import FeatureStore
 from repro.serving.tspm.plan import QueryPlan
 from repro.serving.tspm.replica import (ReadReplica, _pow2,
                                         uncompacted_rows)
+from repro.stream.events import Migrated, TickCompleted
 
 # wave-program opcodes (0 rows are padding: keep passes through unchanged)
 _OP_NOOP, _OP_SCREEN, _OP_STARTS, _OP_ENDS, _OP_MINDUR = range(5)
@@ -179,15 +180,21 @@ class QueryServer:
         self.feature_store = (FeatureStore(feature_ids)
                               if feature_ids is not None else None)
         self.replica = ReadReplica(session, feature_store=self.feature_store)
+        self._auto_publish = bool(auto_publish)
         if self.feature_store is not None:
             seq, pkeys = uncompacted_rows(session)
             self.feature_store.stage_rows(pkeys, seq)
         svc = session.service
         if svc is not None:
-            if self.feature_store is not None:
-                svc.subscribe_delta(self.feature_store.on_delta)
-            if auto_publish:
-                svc.subscribe_tick(self._on_tick)
+            # one typed subscription covers both concerns: TickCompleted
+            # carries the delta feed + publication boundary; Migrated
+            # (src=None: external admit) carries already-mined rows that
+            # never flow through any tick feed
+            kinds = ([TickCompleted, Migrated]
+                     if self.feature_store is not None
+                     else [TickCompleted] if auto_publish else [])
+            if kinds:
+                svc.subscribe(self._on_event, kinds=tuple(kinds))
         self.replica.publish()
 
         self._eval_lock = threading.Lock()
@@ -198,8 +205,17 @@ class QueryServer:
         self._n_waves = 0
 
     # --- publication --------------------------------------------------------
-    def _on_tick(self, _svc) -> None:
-        self.publish()
+    def _on_event(self, ev) -> None:
+        """Typed event subscriber (see :mod:`repro.stream.events`)."""
+        if isinstance(ev, TickCompleted):
+            if self.feature_store is not None:
+                self.feature_store.on_delta(ev.keys, ev.slot_idx,
+                                            ev.seq, ev.dur)
+            if self._auto_publish:
+                self.publish()
+        elif isinstance(ev, Migrated) and ev.src is None \
+                and ev.state is not None and self.feature_store is not None:
+            self.feature_store.on_admitted(ev.state)
 
     def publish(self):
         """Publish a fresh view and garbage-collect superseded cache

@@ -130,6 +130,36 @@ class CompressedBlockStore:
         self._maybe_compact()
         return len(blob)
 
+    def put_bytes(self, key, blob: bytes) -> int:
+        """Append one opaque blob (no codec) under ``key``; same
+        durability/crc/compaction guarantees as :meth:`put`.  The
+        journal's hash-chained segments ride this: they are already
+        self-describing byte streams, not patient histories.  Raw
+        entries carry ``n_events = -1`` so :meth:`get` refuses to decode
+        them as histories."""
+        blob = bytes(blob)
+        if key in self._index:
+            self.dead_bytes += self._index.pop(key)[1]
+        self._fh.seek(0, os.SEEK_END)
+        offset = self._fh.tell()
+        self._fh.write(blob)
+        self._index[key] = [offset, len(blob), zlib.crc32(blob), -1,
+                            len(blob)]
+        if self.auto_flush:
+            self.flush()
+        self._maybe_compact()
+        return len(blob)
+
+    def get_bytes(self, key) -> bytes:
+        """Fetch one raw blob (crc-verified); KeyError if absent,
+        TypeError if the key holds an encoded history block."""
+        if key not in self._index:
+            raise KeyError(key)
+        if self._index[key][3] != -1:
+            raise TypeError(f"key {key!r} holds an encoded history block; "
+                            "use get()")
+        return self._read(key)
+
     def _read(self, key) -> bytes:
         offset, nbytes, crc, _, _ = self._index[key]
         self._fh.flush()
@@ -144,6 +174,8 @@ class CompressedBlockStore:
         """Decode one history (crc-verified); KeyError if absent."""
         if key not in self._index:
             raise KeyError(key)
+        if self._index[key][3] == -1:
+            raise TypeError(f"key {key!r} holds a raw blob; use get_bytes()")
         return codec_lib.decode_block(self._read(key), self.dictionary)
 
     def pop(self, key) -> tuple[np.ndarray, np.ndarray]:

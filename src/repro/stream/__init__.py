@@ -14,6 +14,10 @@ package keeps the screened sequence corpus continuously up to date:
                   hash-bucket counts, incrementally updated, mergeable
                   with batch-screen counts (core/sparsity);
   * ``service`` — micro-batching ingest loop + snapshot queries;
+  * ``events``  — the typed session-event union (DeltaSubmitted /
+                  TickCompleted / Evicted / Migrated / Rebalanced /
+                  CheckpointTaken) + the subscribe/emit dispatcher both
+                  services publish through;
   * ``shard``   — patient->shard router (sticky until migrated) +
                   per-shard services over the ('data',) mesh; global
                   screen by one psum table merge; live patient migration
@@ -24,4 +28,5 @@ Invariant (property-tested): replaying a dbmart event-by-event through
 query masks as ``core.mining.mine`` + ``core.sparsity`` on the full
 dbmart.
 """
-from repro.stream import counts, delta, service, shard, store  # noqa: F401
+from repro.stream import counts, delta, events, service, shard, \
+    store  # noqa: F401

@@ -33,6 +33,8 @@ from repro.core import queries as queries_lib
 from repro.core import sparsity
 from repro.stream import counts as counts_lib
 from repro.stream import delta as delta_lib
+from repro.stream.events import DeltaSubmitted, Evicted, EventDispatcher, \
+    Migrated, TickCompleted
 from repro.stream.store import PatientStore
 from repro.storage.codec import decode_key, encode_key
 
@@ -176,6 +178,8 @@ class StreamService(SnapshotQueries):
         self.bucket_days = bucket_days
         self.device = device
         self.obs = telemetry if telemetry is not None else obs_lib.NOOP
+        self.shard_tag = shard_tag
+        self.events = EventDispatcher(self.obs)
         self.track = "stream" if shard_tag is None else f"shard{shard_tag}"
         labels = {} if shard_tag is None else {"shard": shard_tag}
         if disk_dir is not None and shard_tag is not None:
@@ -199,8 +203,6 @@ class StreamService(SnapshotQueries):
         self._snap: Snapshot | None = None
         self._snap_version = 0
         self.stats: list[TickStats] = []
-        self._on_delta: list = []   # fn(keys, slot_idx, seq, dur) per tick
-        self._on_tick: list = []    # fn(service) after each tick_finish
         self._ticks_restored = 0    # ticks before the checkpoint we resumed
         # a sharded service shares one tracker across shards (the jit
         # caches are process-global; per-shard trackers would each count
@@ -226,6 +228,9 @@ class StreamService(SnapshotQueries):
         if len(dates) == 0:
             return
         self.queue.append(Delta(key, dates, phenx))
+        if self.events.wants(DeltaSubmitted):
+            self.events.emit(DeltaSubmitted(key, dates, phenx,
+                                            shard=self.shard_tag))
 
     def _next_wave(self) -> list[Delta]:
         """Slot-level admission: up to ``tick_patients`` patient slots, and
@@ -349,19 +354,26 @@ class StreamService(SnapshotQueries):
         seq = np.asarray(mined.seq).reshape(B, -1)
         dur = np.asarray(mined.dur).reshape(B, -1)
         pat = np.broadcast_to(pids[:, None], m.shape)
-        self._corpus.append((seq[m], dur[m], pat[m]))
+        seq_m, dur_m = seq[m], dur[m]
+        self._corpus.append((seq_m, dur_m, pat[m]))
         self._invalidate_snapshot()
-        if self._on_delta and pending.keys is not None:
+        tick_ev = None
+        if self.events.wants(TickCompleted) and pending.keys is not None:
             # the tick's newly-mined rows, keyed by patient *key* (slot
             # index into ``keys``), for incremental consumers (the serving
             # feature store); migration admits are not re-delivered — the
-            # rows were already mined (and delivered) on the source shard
-            slot = np.broadcast_to(
-                np.arange(B)[:, None], m.shape)[m]
-            for fn in self._on_delta:
-                fn(pending.keys, slot, seq[m], dur[m])
+            # rows were already mined (and delivered) on the source shard.
+            # seq/dur are the corpus log's own arrays (one masked
+            # selection per tick, not two) — subscribers must not mutate
+            tick_ev = TickCompleted(
+                tick=self.n_ticks + 1, service=self, keys=pending.keys,
+                slot_idx=np.broadcast_to(np.arange(B)[:, None], m.shape)[m],
+                seq=seq_m, dur=dur_m, shard=self.shard_tag)
 
-        self.store.evict_over_budget()
+        evicted, demoted = self.store.evict_over_budget()
+        if (evicted or demoted) and self.events.wants(Evicted):
+            self.events.emit(Evicted(tuple(evicted), tuple(demoted),
+                                     shard=self.shard_tag))
         t_end = time.perf_counter()
         st = TickStats(
             n_patients=B, n_events=int(pending.n_new.sum()),
@@ -382,8 +394,8 @@ class StreamService(SnapshotQueries):
         self._m_queue.set(len(self.queue))
         if self._retrace is not None:
             self._m_retraces.inc(self._retrace.sample())
-        for fn in self._on_tick:
-            fn(self)
+        if tick_ev is not None:
+            self.events.emit(tick_ev)
         return st
 
     def run(self) -> list[TickStats]:
@@ -413,15 +425,28 @@ class StreamService(SnapshotQueries):
         self._snap = None
         self._snap_version += 1
 
+    def subscribe(self, fn, kinds=None, isolate: bool = True):
+        """Register ``fn(event)`` on this service's typed event stream
+        (see :mod:`repro.stream.events`); ``kinds`` filters to a
+        SessionEvent subclass or iterable of them."""
+        return self.events.subscribe(fn, kinds=kinds, isolate=isolate)
+
     def subscribe_delta(self, fn) -> None:
-        """Register ``fn(keys, slot_idx, seq, dur)`` for every tick's
-        newly-mined corpus rows (``slot_idx`` indexes ``keys``)."""
-        self._on_delta.append(fn)
+        """Deprecated shim over :meth:`subscribe`: ``fn(keys, slot_idx,
+        seq, dur)`` per tick's newly-mined corpus rows (``slot_idx``
+        indexes ``keys``).  New code should subscribe to
+        :class:`~repro.stream.events.TickCompleted` directly."""
+        self.events.subscribe(
+            lambda ev: fn(ev.keys, ev.slot_idx, ev.seq, ev.dur),
+            kinds=TickCompleted)
 
     def subscribe_tick(self, fn) -> None:
-        """Register ``fn(service)`` to run after every completed tick —
-        the publication boundary for snapshot-isolated read replicas."""
-        self._on_tick.append(fn)
+        """Deprecated shim over :meth:`subscribe`: ``fn(service)`` after
+        every completed tick — the publication boundary for
+        snapshot-isolated read replicas.  New code should subscribe to
+        :class:`~repro.stream.events.TickCompleted` directly."""
+        self.events.subscribe(lambda ev: fn(ev.service),
+                              kinds=TickCompleted)
 
     def sample_metrics(self) -> None:
         """Set the snapshot-time gauges that are too costly per tick:
@@ -459,6 +484,11 @@ class StreamService(SnapshotQueries):
                 np.asarray(state.corpus_dur, np.int32),
                 np.full(len(state.corpus_seq), pid, np.int32)))
         self._invalidate_snapshot()
+        if self.events.wants(Migrated):
+            # an external handoff (the sharded service journals its own
+            # migrations and keeps this silent by not subscribing here)
+            self.events.emit(Migrated(state.key, src=None,
+                                      dst=self.shard_tag or 0, state=state))
         return pid
 
     def _extract_corpus(self, pid: int) -> tuple[np.ndarray, np.ndarray]:

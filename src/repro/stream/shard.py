@@ -61,6 +61,8 @@ from repro.core import chunking, sparsity
 from repro.data import pipeline
 from repro.distributed.sharding import merge_sharded_counts
 from repro.launch.mesh import shard_devices
+from repro.stream.events import DeltaSubmitted, Evicted, EventDispatcher, \
+    Migrated, Rebalanced, TickCompleted
 from repro.stream.service import PatientState, Snapshot, SnapshotQueries, \
     StreamService, TickStats
 from repro.storage.codec import decode_key, encode_key
@@ -199,7 +201,13 @@ class ShardedStreamService(SnapshotQueries):
         self._snap: Snapshot | None = None
         self._gcounts: np.ndarray | None = None
         self._snap_version = 0
-        self._on_tick: list = []    # fn(service) after each sharded tick
+        self.events = EventDispatcher(self.obs)
+        # per-shard events buffered during a sharded tick, re-emitted at
+        # the cohort boundary in *shard-index* order (dispatch order
+        # depends on which shards have pending admits — not a property
+        # consumers, least of all the journal, should observe)
+        self._collected: list[list] = [[] for _ in range(n_shards)]
+        self._collector_installed = False
         # device-timed busy window for shard_load(): per-shard completion
         # -timed seconds (TickStats.device_s) accumulated since the last
         # shard_load() poll — maintained unconditionally (plain float
@@ -233,18 +241,75 @@ class ShardedStreamService(SnapshotQueries):
         self._gcounts = None
         self._snap_version += 1
 
-    def subscribe_delta(self, fn) -> None:
-        """Register ``fn(keys, slot_idx, seq, dur)`` on every shard: the
-        union of per-shard delta feeds is the cohort's newly-mined rows
-        (rows are keyed by patient key, so migrations don't re-deliver)."""
+    def _ensure_collector(self) -> None:
+        """Install the per-shard event collector on first subscription —
+        a service nobody listens to pays nothing per tick (the shard
+        dispatchers' ``wants`` stays False)."""
+        if self._collector_installed:
+            return
+        self._collector_installed = True
         for svc in self.shards:
-            svc.subscribe_delta(fn)
+            svc.events.subscribe(
+                lambda ev: self._collected[ev.shard].append(ev),
+                kinds=(TickCompleted, Evicted), isolate=False)
+
+    def subscribe(self, fn, kinds=None, isolate: bool = True):
+        """Register ``fn(event)`` on the cohort-level typed event stream
+        (see :mod:`repro.stream.events`): one ``TickCompleted`` per
+        sharded tick with the per-shard delta feeds concatenated in
+        shard-index order, ``Evicted`` per shard, ``Migrated`` /
+        ``Rebalanced`` at migration time."""
+        self._ensure_collector()
+        return self.events.subscribe(fn, kinds=kinds, isolate=isolate)
+
+    def subscribe_delta(self, fn) -> None:
+        """Deprecated shim over :meth:`subscribe`: ``fn(keys, slot_idx,
+        seq, dur)`` with the cohort's newly-mined rows once per sharded
+        tick (rows are keyed by patient key, so migrations don't
+        re-deliver)."""
+        self.subscribe(lambda ev: fn(ev.keys, ev.slot_idx, ev.seq, ev.dur),
+                       kinds=TickCompleted)
 
     def subscribe_tick(self, fn) -> None:
-        """Register ``fn(service)`` after every completed *sharded* tick
-        (all shard waves collected, pending admits flushed, rebalance
-        applied) — the only safe publication boundary for replicas."""
-        self._on_tick.append(fn)
+        """Deprecated shim over :meth:`subscribe`: ``fn(service)`` after
+        every completed *sharded* tick (all shard waves collected,
+        pending admits flushed) — the publication boundary for replicas.
+        Fires *before* any auto-rebalance triggered by the tick: the
+        journal needs the tick's record ahead of the migrations it
+        triggers, and a pre-rebalance view is the same cohort content."""
+        self.subscribe(lambda ev: fn(ev.service), kinds=TickCompleted)
+
+    def _emit_tick_events(self) -> None:
+        """Re-emit the tick's buffered per-shard events at the cohort
+        boundary: evictions per shard, then one aggregated
+        ``TickCompleted`` — all in shard-index order."""
+        col, self._collected = \
+            self._collected, [[] for _ in range(self.n_shards)]
+        if not (self.events.wants(TickCompleted)
+                or self.events.wants(Evicted)):
+            return
+        for evs in col:
+            for ev in evs:
+                if isinstance(ev, Evicted) and self.events.wants(Evicted):
+                    self.events.emit(ev)
+        if not self.events.wants(TickCompleted):
+            return
+        keys: list = []
+        slots, seqs, durs = [], [], []
+        for evs in col:
+            for ev in evs:
+                if isinstance(ev, TickCompleted):
+                    slots.append(np.asarray(ev.slot_idx) + len(keys))
+                    seqs.append(ev.seq)
+                    durs.append(ev.dur)
+                    keys.extend(ev.keys)
+        self.events.emit(TickCompleted(
+            tick=self._tick_count, service=self, keys=keys,
+            slot_idx=(np.concatenate(slots) if slots
+                      else np.zeros(0, np.int64)),
+            seq=(np.concatenate(seqs) if seqs else np.zeros(0, np.int64)),
+            dur=(np.concatenate(durs) if durs else np.zeros(0, np.int32)),
+            shard=None))
 
     # --- ingest -------------------------------------------------------------
     def submit(self, key, dates, phenx) -> None:
@@ -252,7 +317,12 @@ class ShardedStreamService(SnapshotQueries):
             return
         if key not in self.pids:
             self.pids[key] = len(self.pids)
-        self.shards[self.router.route(key)].submit(key, dates, phenx)
+        shard = self.router.route(key)
+        self.shards[shard].submit(key, dates, phenx)
+        if self.events.wants(DeltaSubmitted):
+            self.events.emit(DeltaSubmitted(
+                key, np.asarray(dates, np.int32).reshape(-1),
+                np.asarray(phenx, np.int32).reshape(-1), shard=shard))
 
     def tick(self) -> list[TickStats]:
         """One wave on every shard with queued work.  Empty list == all
@@ -295,12 +365,15 @@ class ShardedStreamService(SnapshotQueries):
         if out:
             self._invalidate_snapshot()
             self._tick_count += 1
+            # cohort events fire *before* any auto-rebalance: the journal
+            # must record the tick ahead of the migrations it triggers
+            # (replay applies them in that order), and the pre-rebalance
+            # view is the same cohort content
+            self._emit_tick_events()
             if self.rebalance_every \
                     and self._tick_count % self.rebalance_every == 0:
                 self.rebalance(busy_weights=self.shard_load()
                                if self.busy_weighted_rebalance else None)
-            for fn in self._on_tick:
-                fn(self)
         return out
 
     def run(self) -> list[TickStats]:
@@ -352,6 +425,7 @@ class ShardedStreamService(SnapshotQueries):
             src_svc.queue = deque(
                 d for d in src_svc.queue if d.key != key)
             dst_svc.queue.extend(queued)
+        state = None
         if key in src_svc.store.pids:
             state = src_svc.extract_patient(key)
             if self.async_migration:
@@ -361,10 +435,34 @@ class ShardedStreamService(SnapshotQueries):
                 dst_svc.admit_patient(state)
         self.router.assign(key, dst)
         self.migrations.append((key, src, dst))
+        if self.events.wants(Migrated):
+            self.events.emit(Migrated(key, src=src, dst=dst, state=state))
         self.migration_wall_s += time.perf_counter() - t0
         self.obs.tracer.finish(sp)
         self._m_migrations.inc()
         self._invalidate_snapshot()
+
+    def admit_patient(self, state: PatientState,
+                      dst: int | None = None) -> int:
+        """Admit an externally-extracted patient (cross-service handoff:
+        ``extract_patient`` elsewhere, admit here).  Routes to ``dst``
+        (or the router's home for the key), registers a global pid, pins
+        the router, and emits :class:`Migrated` with ``src=None`` so
+        feed consumers (the serving feature store) see the patient's
+        already-mined rows arrive."""
+        key = state.key
+        if key in self.pids or key in self._pending_keys:
+            raise ValueError(f"key {key!r} already admitted")
+        dst = self.router.route(key) if dst is None else dst
+        if not 0 <= dst < self.n_shards:
+            raise ValueError(f"dst {dst} out of range [0, {self.n_shards})")
+        self.pids[key] = len(self.pids)
+        pid = self.shards[dst].admit_patient(state)
+        self.router.assign(key, dst)
+        self._invalidate_snapshot()
+        if self.events.wants(Migrated):
+            self.events.emit(Migrated(key, src=None, dst=dst, state=state))
+        return pid
 
     def _flush_pending(self, shard: int | None = None) -> None:
         """Phase 2 of async migration: land parked patient states on their
@@ -484,6 +582,8 @@ class ShardedStreamService(SnapshotQueries):
             moves.append((key, hot, cold))
         if moves:
             self._m_rebalances.inc()
+            if self.events.wants(Rebalanced):
+                self.events.emit(Rebalanced(tuple(moves)))
         return moves
 
     def sample_metrics(self) -> None:

@@ -226,7 +226,7 @@ class PatientStore:
             jnp.asarray(n_new, jnp.int32))
 
     # --- eviction -----------------------------------------------------------
-    def evict_over_budget(self) -> list:
+    def evict_over_budget(self) -> tuple[list, list]:
         """Spill least-recently-touched patients until the *mining working
         set* (pair-slab cost, BYTES_PER_PAIR model) fits the budget.
 
@@ -234,10 +234,12 @@ class PatientStore:
         the first planned chunk is the resident set, the tail spills.  Note
         the budget bounds resident mining cost, not raw plane allocation:
         the padded planes grow monotonically and at least one patient
-        always stays resident.
+        always stays resident.  Returns ``(evicted, demoted)`` key lists
+        (device -> host spills and the host -> disk demotions they
+        triggered) — the payload of the ``Evicted`` session event.
         """
         if self.budget_bytes is None or not self.rows:
-            return []
+            return [], []
         resident = np.asarray(sorted(self.rows.values()), np.int64)
         order = resident[np.argsort(-self._touch[resident], kind="stable")]
         nev = np.asarray(self.nevents)[order]
@@ -245,7 +247,7 @@ class PatientStore:
                                     self.pad_multiple, layout="dense")
         victims = order[plan[0].stop:]
         if len(victims) == 0:
-            return []
+            return [], []
         # one host gather + one device scatter for the whole wave
         ph = np.asarray(self.phenx[victims])
         dt = np.asarray(self.date[victims])
@@ -259,23 +261,24 @@ class PatientStore:
             self._free.append(int(row))
             evicted.append(key)
         self.nevents = self.nevents.at[jnp.asarray(victims)].set(0)
-        self._demote_over_budget()
+        demoted = self._demote_over_budget()
         self._m_evictions.inc(len(evicted))
         self._m_resident.set(len(self.rows))
         self._m_spilled.set(self.spilled_count)
-        return evicted
+        return evicted, demoted
 
-    def _demote_over_budget(self) -> None:
+    def _demote_over_budget(self) -> list:
         """Walk the host tier oldest-spill-first, demoting histories to the
         compressed disk tier until the host spill working set fits
         ``disk_bytes`` — the same n^2 * BYTES_PER_PAIR cost model as the
         device budget, applied one boundary down.  No disk tier (or no
-        budget) means the host tier is unbounded, the pre-tier behavior."""
+        budget) means the host tier is unbounded, the pre-tier behavior.
+        Returns the demoted keys in demotion order."""
         if self.disk is None or self.disk_bytes is None:
-            return
+            return []
         counts = self.host.event_counts()
         cost = sum(n * n for n in counts.values()) * chunking.BYTES_PER_PAIR
-        demoted = 0
+        demoted: list = []
         for key in self.host.keys():
             if cost <= self.disk_bytes:
                 break
@@ -283,9 +286,10 @@ class PatientStore:
             self.disk.hold(key, ph, dt)
             self.host.drop(key)
             cost -= counts[key] ** 2 * chunking.BYTES_PER_PAIR
-            demoted += 1
+            demoted.append(key)
         if demoted:
-            self._m_demotions.inc(demoted)
+            self._m_demotions.inc(len(demoted))
+        return demoted
 
     # --- migration handoff --------------------------------------------------
     def extract(self, key) -> tuple[int, np.ndarray, np.ndarray]:

@@ -188,6 +188,41 @@ def test_nightly_uploads_trace_artifact(workflow):
     assert "chaos_trace.json" in upload[0]["with"]["path"]
 
 
+def test_journal_conformance_gate_present(workflow, suites):
+    """The audit log must acquit honest runs and convict forgeries:
+    tier-1 carries a gate that verifies + replays a live journaled
+    session, forges a re-chained delta edit (which must yield a typed
+    fraud proof), and re-validates the checked-in
+    BENCH_journal_overhead.json (< 5% ceiling with replay asserted
+    exact); the journal_overhead suite is registered so bench-smoke
+    regenerates the artifact on every PR."""
+    assert "journal_overhead" in suites
+    runs = " ".join(s.get("run", "")
+                    for s in workflow["jobs"]["tier1"]["steps"])
+    assert "BENCH_journal_overhead.json" in runs
+    assert "journal_dir" in runs
+    assert "write_journal" in runs, \
+        "the gate never forges a re-chained journal"
+    assert "MiningSession.replay" in runs
+    assert "overhead_ceiling" in runs and "replay_exact" in runs
+
+
+def test_nightly_journal_replay_drill(workflow):
+    """The nightly must journal a sharded chaos run (eviction + live
+    rebalancing, commitments exercised) and replay it in a separate
+    process, diffing the printed state digests — the byte-exact audit
+    contract across real process boundaries."""
+    slow = workflow["jobs"]["slow-nightly"]
+    runs = " ".join(s.get("run", "") for s in slow["steps"])
+    assert "--journal-dir" in runs and "--replay-journal" in runs
+    assert "--journal-commit-every" in runs, \
+        "the drill must exercise merkle commitments, not just the chain"
+    assert "--rebalance-every" in runs.split("--journal-dir")[0] \
+        or "--rebalance-every" in runs
+    assert "state_digest" in runs
+    assert "diff " in runs, "the replayed digest is never compared"
+
+
 def test_serving_conformance_gate_present(workflow, suites):
     """The batched read path must stay byte-invisible: tier-1 carries a
     gate driving a live session.serve() against frame-chain evaluation

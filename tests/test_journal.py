@@ -1,0 +1,378 @@
+"""Verifiable tick journal: chaos replay exactness + the fraud-proof matrix.
+
+The headline guarantee has two halves:
+
+  * **completeness** — journaling any chaos interleaving (eviction,
+    migration, rebalance, telemetry on/off, 1 or 2 shards) is invisible
+    to the run itself, and ``MiningSession.replay`` of the journal
+    reconstructs a session whose corpus, sketch table, router pins and
+    pid table are byte-identical to the uninterrupted run *and* to the
+    batch mine+screen oracle;
+  * **soundness** — every tamper (a single flipped byte in any entry, a
+    torn segment, and the re-chained forgeries an adversary who knows
+    the format would write: truncation, reorder, payload edits, forged
+    commitments) yields a typed :class:`FraudProof` naming the first
+    divergent tick, and a clean journal never produces a false positive.
+
+The typed session-event API the journal rides on (``subscribe(fn,
+kinds=...)``, ``session.events()``, subscriber isolation) is pinned at
+the bottom.
+"""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro import obs as obs_lib
+from repro.api import MiningConfig, MiningSession
+from repro.journal import (ChainBreak, CommitmentMismatch, Divergence,
+                           FraudProof, TornSegment, Truncated, read_journal,
+                           write_journal)
+from repro.journal.entries import decode_entry, encode_entry, entry_kind
+from repro.journal.journal import build_segment
+from repro.storage.blockstore import CompressedBlockStore
+from repro.stream.events import (DeltaSubmitted, Migrated, TickCompleted)
+from repro.stream.service import StreamService
+from tests.conftest import random_dbmart
+from tests.test_stream import H
+from tests.test_stream_migration import (_apply_ops,
+                                         _assert_sessions_identical,
+                                         _checkpoint_ops, assert_matches_batch)
+
+
+def _chaos_session(tmp_path, rng, n_shards=2, telemetry=False,
+                   commit_every=3):
+    """One journaled chaos run (shared by the exactness and tamper
+    tests): returns (session, db, ops, config)."""
+    db = random_dbmart(rng, n_patients=9, max_events=16)
+    config = MiningConfig(engine="sharded", n_shards=n_shards,
+                          tick_patients=2, n_buckets_log2=H, screen="hash",
+                          budget_bytes=20_000, disk_bytes=5_000,
+                          telemetry=telemetry,
+                          journal_dir=str(tmp_path / "journal"),
+                          journal_commit_every=commit_every)
+    ops = _checkpoint_ops(db, rng, n_shards)
+    session = MiningSession(config)
+    _apply_ops(session, db, ops)
+    return session, db, ops, config
+
+
+# --- completeness: chaos replay is byte-identical ---------------------------
+
+@pytest.mark.parametrize("n_shards,telemetry",
+                         [(1, False), (2, False), (2, True)])
+def test_journal_chaos_replay_byte_identical(n_shards, telemetry, tmp_path):
+    """Journal a random interleaving of submit/tick/evict/migrate/
+    rebalance, replay it into a fresh session: corpus, sketch, router
+    pins and pids match the live run byte-for-byte, the live run matches
+    an unjournaled run of the same schedule (journaling is invisible),
+    and both match the batch oracle."""
+    rng = np.random.default_rng(8_800 + 10 * n_shards + telemetry)
+    session, db, ops, config = _chaos_session(
+        tmp_path, rng, n_shards=n_shards, telemetry=telemetry)
+
+    bare = MiningSession(config.replace(journal_dir=None, telemetry=False))
+    _apply_ops(bare, db, ops)
+    _assert_sessions_identical(session, bare)
+
+    res = session.verify()
+    assert res.ok and res.proof is None and bool(res)
+    assert res.n_ticks == session.service.n_ticks
+    assert res.n_commits >= 1
+
+    replayed = MiningSession.replay(config.journal_dir)
+    _assert_sessions_identical(replayed, session)
+    assert_matches_batch(replayed.service, db, rng)
+
+
+def test_journal_stream_engine_replay(tmp_path):
+    """The single-shard stream engine journals and replays exactly too
+    (no router/migration planes in its event stream)."""
+    rng = np.random.default_rng(97)
+    db = random_dbmart(rng, n_patients=8, max_events=14)
+    config = MiningConfig(tick_patients=2, n_buckets_log2=H, screen="hash",
+                          budget_bytes=20_000, disk_bytes=5_000,
+                          journal_dir=str(tmp_path / "j"),
+                          journal_commit_every=2)
+    ops = _checkpoint_ops(db, rng, n_shards=1)
+    session = MiningSession(config)
+    _apply_ops(session, db, ops)
+    assert isinstance(session.service, StreamService)
+    assert session.verify().ok
+
+    replayed = MiningSession.replay(config.journal_dir)
+    a, b = session.service.snapshot(), replayed.service.snapshot()
+    for name in ("seq", "dur", "patient", "counts"):
+        assert np.asarray(getattr(a, name)).tobytes() \
+            == np.asarray(getattr(b, name)).tobytes()
+    assert session.service.store.pids == replayed.service.store.pids
+    assert session.service.n_ticks == replayed.service.n_ticks
+
+
+def test_replay_upto_tick_stops_at_the_named_tick(tmp_path):
+    """``replay(upto_tick=k)`` reconstructs the state as of tick k: the
+    tick clock stops there and the corpus grows monotonically with k."""
+    rng = np.random.default_rng(5)
+    db = random_dbmart(rng, n_patients=6, max_events=10)
+    config = MiningConfig(tick_patients=2, n_buckets_log2=H, screen="hash",
+                          journal_dir=str(tmp_path / "j"),
+                          journal_commit_every=2)
+    session = MiningSession(config)
+    for p in range(db.n_patients):       # one productive tick per patient
+        n = int(db.nevents[p])
+        if n:
+            session.submit(p, db.date[p, :n], db.phenx[p, :n])
+            session.service.tick()
+    total = session.service.n_ticks
+    assert total >= 3
+    session.journal().flush()
+
+    prev_rows = -1
+    for k in (1, total // 2, total):
+        part = MiningSession.replay(config.journal_dir, upto_tick=k)
+        assert part.service.n_ticks == k
+        rows = len(np.asarray(part.service.snapshot().seq))
+        assert rows >= prev_rows
+        prev_rows = rows
+    full = MiningSession.replay(config.journal_dir)
+    assert np.asarray(full.service.snapshot().seq).tobytes() \
+        == np.asarray(session.service.snapshot().seq).tobytes()
+
+
+def test_journal_survives_checkpoint_restore(tmp_path):
+    """A checkpoint-restored session keeps journaling into the same
+    genesis-rooted log: the combined journal verifies, and replay from
+    genesis equals the resumed session's final state."""
+    rng = np.random.default_rng(41)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    config = MiningConfig(engine="sharded", n_shards=2, tick_patients=2,
+                          n_buckets_log2=H, screen="hash",
+                          journal_dir=str(tmp_path / "j"),
+                          journal_commit_every=2)
+    ops = _checkpoint_ops(db, rng, 2)
+    cut = int(rng.integers(1, len(ops)))
+
+    interrupted = MiningSession(config)
+    _apply_ops(interrupted, db, ops[:cut])
+    path = interrupted.checkpoint(str(tmp_path / "ckpt"))
+    interrupted.journal().close()
+
+    resumed = MiningSession.restore(path)
+    _apply_ops(resumed, db, ops[cut:])
+    res = resumed.verify()
+    assert res.ok, str(res)
+    kinds = [entry_kind(e) for e, _ in read_journal(config.journal_dir)]
+    assert kinds.count("open") == 1 and "checkpoint" in kinds
+
+    replayed = MiningSession.replay(config.journal_dir)
+    _assert_sessions_identical(replayed, resumed)
+
+
+# --- soundness: the tamper matrix -------------------------------------------
+
+def _rewrite(root, pairs):
+    """Replace a journal's segments with exactly ``pairs`` — *preserving*
+    the stored hashes (unlike write_journal, which re-chains)."""
+    store = CompressedBlockStore(root)
+    try:
+        for key in list(store.keys()):
+            if isinstance(key, str) and key.startswith("jseg"):
+                store.discard(key)
+        store.put_bytes("jseg00000000", build_segment(pairs))
+    finally:
+        store.close()
+
+
+def _fork(tmp_path, src, i):
+    dst = str(tmp_path / f"fork{i}")
+    shutil.copytree(src, dst)
+    return dst
+
+
+def test_every_single_byte_flip_names_the_divergent_tick(tmp_path):
+    """Flip one byte in *every* entry of a chaos journal (stored hash
+    untouched): each copy fails verification with a ChainBreak at
+    exactly that entry, carrying the 1-based first divergent tick —
+    and the untouched journal still verifies after the whole sweep."""
+    session, *_ = _chaos_session(tmp_path, np.random.default_rng(63))
+    jdir = session.config.journal_dir
+    session.journal().flush()
+    clean = read_journal(jdir)
+    kinds = [entry_kind(e) for e, _ in clean]
+    assert len(clean) > 10 and kinds[0] == "open"
+
+    for i, (e, h) in enumerate(clean):
+        flipped = bytearray(e)
+        flipped[len(e) // 2] ^= 0x01
+        forged = clean[:i] + [(bytes(flipped), h)] + clean[i + 1:]
+        t = str(tmp_path / f"flip{i}")
+        shutil.copytree(jdir, t)
+        _rewrite(t, forged)
+        res = session.verify(t)
+        assert not res.ok and isinstance(res.proof, ChainBreak), str(res)
+        assert res.proof.index == i
+        assert res.proof.tick == kinds[:i].count("tick") + 1
+
+    assert session.verify().ok        # no false positive on the original
+
+
+def test_torn_segment_is_a_fraud_proof(tmp_path):
+    """A segment that fails framing (storage damage rather than a
+    forgery) still produces a typed proof, not an exception."""
+    session, *_ = _chaos_session(tmp_path, np.random.default_rng(29),
+                                 n_shards=1)
+    jdir = session.config.journal_dir
+    session.journal().flush()
+    t = _fork(tmp_path, jdir, "torn")
+    store = CompressedBlockStore(t)
+    key = sorted(k for k in store.keys()
+                 if isinstance(k, str) and k.startswith("jseg"))[-1]
+    store.put_bytes(key, b"\xff\xfe\xfd not a segment")
+    store.close()
+    res = session.verify(t)
+    assert not res.ok and isinstance(res.proof, TornSegment), str(res)
+    assert res.proof.tick >= 1
+
+
+def test_rechained_forgeries_are_caught_by_replay(tmp_path):
+    """An adversary who re-derives the chain writes an *internally
+    consistent* journal — layer 1 passes; replay (shadow stream +
+    commitments) and the against-live fork check must catch it."""
+    session, *_ = _chaos_session(tmp_path, np.random.default_rng(77))
+    jdir = session.config.journal_dir
+    session.journal().flush()
+    clean = read_journal(jdir)
+    raw = [e for e, _ in clean]
+    kinds = [entry_kind(e) for e in raw]
+    n_case = 0
+
+    def forge(entries):
+        nonlocal n_case
+        t = str(tmp_path / f"forge{n_case}")
+        n_case += 1
+        shutil.copytree(jdir, t)
+        write_journal(t, entries)       # the adversary re-chains
+        return session.verify(t)
+
+    # (a) rollback: drop the tail
+    res = forge(raw[:-3])
+    assert not res.ok and isinstance(res.proof, (Truncated, Divergence)), \
+        str(res)
+
+    # (b) reorder two deltas of different patients
+    deltas = [i for i, k in enumerate(kinds) if k == "delta"]
+    swap = next((i, j) for i in deltas for j in deltas if j > i
+                and decode_entry(raw[i])[1]["key"]
+                != decode_entry(raw[j])[1]["key"])
+    i, j = swap
+    reordered = list(raw)
+    reordered[i], reordered[j] = reordered[j], reordered[i]
+    res = forge(reordered)
+    assert not res.ok and isinstance(res.proof, FraudProof), str(res)
+    assert res.proof.tick <= kinds[:j].count("tick") + 1
+
+    # (c) forged merkle commitment (claim a different pid table)
+    ci = kinds.index("commit")
+    kind, fields, arrays, blobs = decode_entry(raw[ci])
+    fields = dict(fields, pids="00" * 32)
+    forged_commit = list(raw)
+    forged_commit[ci] = encode_entry(kind, fields, arrays, blobs)
+    res = forge(forged_commit)
+    assert not res.ok and isinstance(res.proof, CommitmentMismatch), str(res)
+    assert res.proof.tick == kinds[:ci].count("tick") + 1
+
+    # (d) edited delta payload (a different clinical history)
+    target = next(i for i in deltas
+                  if len(decode_entry(raw[i])[2]["phenx"]) >= 2)
+    kind, fields, arrays, blobs = decode_entry(raw[target])
+    arrays = dict(arrays, phenx=arrays["phenx"] + 1000)
+    edited = list(raw)
+    edited[target] = encode_entry(kind, fields, arrays, blobs)
+    res = forge(edited)
+    assert not res.ok and isinstance(res.proof, FraudProof), str(res)
+
+    # the real journal still verifies after the whole matrix
+    assert session.verify().ok
+
+
+def test_verify_requires_a_journal():
+    session = MiningSession(MiningConfig(tick_patients=2, n_buckets_log2=H))
+    session.submit(0, [1, 2], [3, 4])
+    session.run()
+    assert session.journal() is None
+    with pytest.raises(RuntimeError):
+        session.verify()
+
+
+# --- the typed session-event API --------------------------------------------
+
+def test_typed_subscription_and_legacy_shims_agree():
+    """One subscribe(fn, kinds=...) API: typed subscribers, the deprecated
+    subscribe_tick/subscribe_delta shims, and the pull-side
+    session.events() tap all observe the same tick."""
+    session = MiningSession(MiningConfig(tick_patients=4, n_buckets_log2=H))
+    svc = session._ensure_service()
+    tap = session.events(kinds=(DeltaSubmitted, TickCompleted))
+    typed, shim_delta, shim_tick = [], [], []
+    svc.subscribe(typed.append, kinds=TickCompleted)
+    svc.subscribe_delta(
+        lambda keys, slot, seq, dur: shim_delta.append(np.asarray(seq)))
+    svc.subscribe_tick(shim_tick.append)
+
+    session.submit(0, [1, 5, 9], [3, 4, 7])
+    session.run()
+
+    assert len(typed) == 1 and typed[0].tick == 1
+    assert shim_tick == [svc]
+    assert np.array_equal(shim_delta[0], typed[0].seq)
+    drained = list(tap)
+    assert [type(ev) for ev in drained] == [DeltaSubmitted, TickCompleted]
+    assert len(tap) == 0              # drained
+    # kinds filtering is enforced at subscribe time
+    with pytest.raises(TypeError):
+        svc.subscribe(lambda ev: None, kinds=(int,))
+
+
+def test_subscriber_errors_are_isolated_and_counted():
+    """A raising subscriber inside tick_finish must not corrupt the tick:
+    the error is dropped, counted on events.subscriber_errors, and later
+    subscribers still run (satellite fix for the PR 9 sync callbacks)."""
+    tel = obs_lib.Telemetry()
+    svc = StreamService(tick_patients=2, n_buckets_log2=H, telemetry=tel)
+    seen = []
+
+    def bad(ev):
+        raise RuntimeError("subscriber boom")
+
+    svc.subscribe(bad, kinds=TickCompleted)                  # isolate=True
+    svc.subscribe(seen.append, kinds=TickCompleted)
+    svc.submit(0, [1, 2], [3, 4])
+    svc.tick()                                               # must not raise
+    assert len(seen) == 1
+    assert len(np.asarray(svc.snapshot().seq)) > 0           # tick landed
+    assert tel.metrics.value("events.subscriber_errors") == 1
+
+    # isolate=False (the journal's mode) propagates instead
+    svc2 = StreamService(tick_patients=2, n_buckets_log2=H)
+    svc2.subscribe(bad, kinds=TickCompleted, isolate=False)
+    svc2.submit(0, [1, 2], [3, 4])
+    with pytest.raises(RuntimeError, match="subscriber boom"):
+        svc2.tick()
+
+
+def test_external_admit_emits_migrated_with_state():
+    """Cross-service handoff surfaces as Migrated(src=None) carrying the
+    admitted PatientState — the event the feature store and journal key
+    off (PR 9's admitted-rows gap)."""
+    donor = StreamService(tick_patients=2, n_buckets_log2=H)
+    donor.submit(7, [1, 2, 9], [3, 4, 6])
+    donor.run()
+    state = donor.extract_patient(7)
+
+    svc = StreamService(tick_patients=2, n_buckets_log2=H)
+    got = []
+    svc.subscribe(got.append, kinds=Migrated)
+    svc.admit_patient(state)
+    assert len(got) == 1
+    ev = got[0]
+    assert ev.key == 7 and ev.src is None and ev.state is state

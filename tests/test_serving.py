@@ -512,6 +512,59 @@ def test_feature_store_bootstrap_midstream():
         assert_features_identical(server, ids)
 
 
+@pytest.mark.parametrize("engine", ["stream", "sharded"])
+def test_feature_store_covers_migration_admitted_patients(engine):
+    """A patient admitted by cross-service migration gets feature rows:
+    its already-mined corpus rows never appear in any tick's delta feed,
+    so the store must pick them up from the Migrated(src=None) event —
+    the PR 9 scope gap.  Byte-identical to to_features recomputation
+    both right after the admit and after further ticks."""
+    rng = np.random.default_rng(79)
+    db = random_dbmart(rng, n_patients=8, max_events=12)
+    donors = [p for p in range(db.n_patients) if db.nevents[p] > 1][-2:]
+    donor = MiningSession(MiningConfig(
+        threshold=2, tick_patients=2, n_buckets_log2=H))
+    for p in donors:
+        n = int(db.nevents[p])
+        donor.submit(p, db.date[p, :n], db.phenx[p, :n])
+    donor.service.run()
+    states = [donor.service.extract_patient(p) for p in donors
+              if p in donor.service.store.pids]
+    assert states, "no donor patient survived to extraction"
+    # ids spanning the cohort *plus* the admitted states' own mined rows,
+    # so the assertion cannot pass vacuously
+    ids = np.unique(np.concatenate(
+        [_feature_ids_for(db)]
+        + [np.asarray(s.corpus_seq, np.int64)[:3] for s in states]))
+
+    kw = dict(threshold=2, tick_patients=2, n_buckets_log2=H, engine=engine)
+    if engine == "sharded":
+        kw["n_shards"] = 2
+    session = MiningSession(MiningConfig(**kw))
+    server = session.serve(feature_ids=ids)
+    for p in range(db.n_patients):
+        if p in donors:
+            continue
+        n = int(db.nevents[p])
+        session.submit(p, db.date[p, :n], db.phenx[p, :n])
+    session.service.run()
+    assert_features_identical(server, ids)
+
+    for state in states:
+        session.service.admit_patient(state)
+    server.publish()
+    assert_features_identical(server, ids)
+    # non-vacuous: the admitted patients actually own feature columns
+    x = np.asarray(server.features().x)
+    assert all(x[int(s.key)].any() for s in states
+               if len(s.corpus_seq) and int(s.key) < len(x))
+    # and the store keeps tracking ticks that arrive after the admit
+    p = donors[0]
+    session.submit(p, db.date[p, :1], db.phenx[p, :1])
+    session.service.run()
+    assert_features_identical(server, ids)
+
+
 def test_feature_store_batch_session():
     rng = np.random.default_rng(71)
     db = random_dbmart(rng, n_patients=8, max_events=12)
